@@ -1,0 +1,91 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import (
+    build_path_system,
+    jellyfish_heterogeneous,
+    lp_concurrent_flow,
+    mw_concurrent_flow,
+    random_permutation_traffic,
+)
+
+ART = pathlib.Path(os.environ.get("REPRO_BENCH_OUT", "artifacts/bench"))
+FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))  # bigger sizes
+
+
+def save(name: str, payload: dict) -> None:
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def alpha_of(top, seed=0, k=8, slack=3, method="auto", iters=500) -> float:
+    """Max concurrent flow alpha for a random permutation matrix."""
+    comm = random_permutation_traffic(top, seed=seed)
+    ps = build_path_system(top, comm, k=k, max_slack=slack)
+    if method == "mw" or (method == "auto" and ps.n_paths > 30000):
+        return mw_concurrent_flow(ps, iters=iters).alpha
+    return lp_concurrent_flow(ps).alpha
+
+
+def spread_servers(total: int, n_switches: int) -> np.ndarray:
+    per = total // n_switches
+    extra = total - per * n_switches
+    servers = np.full(n_switches, per, dtype=np.int64)
+    servers[:extra] += 1
+    return servers
+
+
+def jellyfish_same_equipment(n_switches: int, ports: int, n_servers: int, seed=0):
+    """Jellyfish on identical switching equipment hosting n_servers."""
+    return jellyfish_heterogeneous(
+        np.full(n_switches, ports), spread_servers(n_servers, n_switches), seed=seed
+    )
+
+
+def supports_full_capacity(top, n_matrices=3, k=8, tol=1e-6) -> bool:
+    return all(
+        alpha_of(top, seed=s, k=k) >= 1.0 - tol for s in range(n_matrices)
+    )
+
+
+def max_servers_at_full_capacity(
+    n_switches: int, ports: int, lo: int, hi: int, seeds=(0,), k=8
+) -> int:
+    """Binary search (paper §4 methodology) for the largest server count the
+    equipment supports at full capacity, validated across topology seeds."""
+
+    def ok(m: int) -> bool:
+        for seed in seeds:
+            top = jellyfish_same_equipment(n_switches, ports, m, seed=seed)
+            if not supports_full_capacity(top, n_matrices=3, k=k):
+                return False
+        return True
+
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,70 @@
+"""Beyond-paper: fabric behavior at 1000+-node scale (the brief's design
+point).  Ring-collective embedding quality and failure re-embedding for
+Jellyfish vs fat-tree inter-pod fabrics at 16..1024 pods, plus heterogeneous
+expansion (paper §4.2: newer switches with more ports join the same graph)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import add_switch, jellyfish, path_stats
+from repro.fabric import make_fabric
+
+from .common import Timer, csv_row, save
+
+
+def run() -> list[str]:
+    out, rows = [], []
+    for pods in (16, 64, 256, 1024):
+        with Timer() as t:
+            jf = make_fabric("jellyfish", n_pods=pods, degree=8, seed=0)
+            ej = jf.ring()
+            # failure resilience of the embedding itself
+            ef = jf.fail(0.1, seed=1).ring()
+        row = {
+            "pods": pods,
+            "jf_stretch": ej.stretch, "jf_congestion": ej.congestion,
+            "jf_efficiency": ej.efficiency,
+            "jf_stretch_after_10pct_fail": ef.stretch,
+            "jf_efficiency_after_fail": ef.efficiency,
+            "seconds": round(t.dt, 2),
+        }
+        if pods <= 256:
+            ft = make_fabric("fattree", n_pods=pods)
+            eft = ft.ring()
+            row["ft_stretch"] = eft.stretch
+            row["ft_efficiency"] = eft.efficiency
+        rows.append(row)
+        out.append(
+            csv_row(
+                f"fabric_pods{pods}", t.dt * 1e6,
+                f"jf_eff={ej.efficiency:.2f};fail_eff={ef.efficiency:.2f}"
+                + (f";ft_eff={row['ft_efficiency']:.2f}" if "ft_efficiency" in row else ""),
+            )
+        )
+
+    # heterogeneous expansion (paper §4.2): a 48-port generation joins a
+    # 24-port cluster; path lengths must stay short and the graph valid
+    with Timer() as t:
+        top = jellyfish(100, 24, 16, seed=0)
+        base_mean = path_stats(top).mean
+        for i in range(20):
+            top = add_switch(top, 48, 32, seed=100 + i)  # bigger switches
+        st = path_stats(top)
+        top.validate()
+    rows.append({
+        "hetero": {"base_mean_path": base_mean, "after_mean_path": st.mean,
+                   "n_switches": top.n_switches,
+                   "degree_mix": sorted(set(top.net_degree.tolist()))},
+        "seconds": round(t.dt, 2),
+    })
+    out.append(
+        csv_row("fabric_hetero_expand", t.dt * 1e6,
+                f"path {base_mean:.2f}->{st.mean:.2f} w/ 48-port joiners")
+    )
+    save("fabric_scale", {"rows": rows})
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

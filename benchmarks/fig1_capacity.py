@@ -1,0 +1,79 @@
+"""Fig 1a/1b (bisection-bound curves) + Fig 1c (servers at full capacity).
+
+1a/1b are closed-form (Bollobás bound): equal-cost curves and equipment cost
+vs servers at full bisection for commodity port counts.
+1c is the measured headline: same switching equipment as a k-ary fat-tree,
+binary-search the server count Jellyfish supports at full capacity under
+random-permutation traffic with optimal (LP) routing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bollobas_bound, fattree_equipment
+
+from .common import FULL, Timer, csv_row, max_servers_at_full_capacity, save
+
+
+def fig1ab() -> dict:
+    curves = {}
+    for ports in (24, 32, 48, 64):
+        # smallest r with B >= 1 (full bisection) -> server capacity per switch
+        for r in range(ports - 1, 0, -1):
+            if bollobas_bound(ports, r) >= 1.0:
+                break
+        curves[ports] = {
+            "r_full_bisection": r,
+            "servers_per_switch": ports - r,
+            # cost curve: switches needed for N servers = N / (k - r)
+            "switches_per_1000_servers": 1000.0 / max(ports - r, 1),
+            "fattree_switches_per_1000_servers": 1000.0
+            * fattree_equipment(ports)["switches"]
+            / fattree_equipment(ports)["servers"],
+        }
+    return curves
+
+
+def fig1c() -> list[dict]:
+    rows = []
+    ks = (4, 6, 8, 10, 12) if FULL else (4, 6, 8, 10)
+    for k in ks:
+        eq = fattree_equipment(k)
+        with Timer() as t:
+            best = max_servers_at_full_capacity(
+                eq["switches"], eq["ports_per_switch"],
+                lo=eq["servers"] // 2, hi=2 * eq["servers"], seeds=(0,),
+            )
+        rows.append(
+            {
+                "fattree_k": k,
+                "fattree_servers": eq["servers"],
+                "jellyfish_servers": best,
+                "ratio": best / eq["servers"],
+                "seconds": round(t.dt, 2),
+            }
+        )
+    return rows
+
+
+def run() -> list[str]:
+    ab = fig1ab()
+    rows = fig1c()
+    save("fig1ab_bisection_curves", ab)
+    save("fig1c_servers_at_capacity", {"rows": rows})
+    out = []
+    for r in rows:
+        out.append(
+            csv_row(
+                f"fig1c_k{r['fattree_k']}",
+                r["seconds"] * 1e6,
+                f"jf={r['jellyfish_servers']}/ft={r['fattree_servers']}"
+                f"(x{r['ratio']:.2f})",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

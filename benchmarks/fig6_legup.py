@@ -1,0 +1,50 @@
+"""Fig 6: incremental-expansion economics vs LEGUP (Clos upgrades).
+
+Same per-stage budgets and cost model for both arcs (see core/legup.py for
+the reimplementation notes — the original LEGUP is not public).  The paper's
+headline: Jellyfish reaches LEGUP's final bisection at ~40% of the cost.
+We report the cumulative cost at which the Jellyfish arc first reaches the
+Clos arc's final-stage bisection."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ExpansionStage, jellyfish_arc, legup_arc
+
+from .common import Timer, csv_row, save
+
+
+def run() -> list[str]:
+    # stage 0: 480 servers; stage 1: +240 servers; stages 2..8 switches only
+    stages = [ExpansionStage(budget=0.0, add_servers=480),
+              ExpansionStage(budget=60_000.0, add_servers=240)] + [
+        ExpansionStage(budget=25_000.0) for _ in range(7)
+    ]
+    with Timer() as t:
+        clos = legup_arc(stages, k_ports=24, servers_per_leaf=16)
+        jf = jellyfish_arc(stages, k_ports=24, servers_per_switch=16, seed=0)
+    target = clos[-1].bisection
+    cost_at = None
+    for p in jf:
+        if p.bisection >= target:
+            cost_at = p.cum_cost
+            break
+    ratio = (cost_at / clos[-1].cum_cost) if cost_at else float("nan")
+    rows = {
+        "clos": [vars(p) for p in clos],
+        "jellyfish": [vars(p) for p in jf],
+        "clos_final_bisection": target,
+        "jf_cost_to_match": cost_at,
+        "cost_ratio": ratio,
+        "seconds": round(t.dt, 2),
+    }
+    save("fig6_legup", rows)
+    return [
+        csv_row("fig6_legup", t.dt * 1e6,
+                f"jf_cost/clos_cost={ratio:.2f};target_bisec={target:.3f}")
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

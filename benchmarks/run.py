@@ -1,0 +1,54 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run fig1 fig7  # subset
+    REPRO_BENCH_FULL=1 ... run                         # paper-scale sizes
+
+Artifacts land in artifacts/bench/*.json (consumed by EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig1", "benchmarks.fig1_capacity"),
+    ("fig2", "benchmarks.fig2_degree_diameter"),
+    ("fig3", "benchmarks.fig3_swdc"),
+    ("fig4", "benchmarks.fig4_path_length"),
+    ("fig5", "benchmarks.fig5_incremental"),
+    ("fig6", "benchmarks.fig6_legup"),
+    ("fig7", "benchmarks.fig7_resilience"),
+    ("fig8", "benchmarks.fig8_mptcp"),
+    ("fig12", "benchmarks.fig12_locality"),
+    ("cabling", "benchmarks.fig_cabling"),
+    ("fabric", "benchmarks.fabric_scale"),
+    ("kernels", "benchmarks.kernels_bench"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, modname in MODULES:
+        if want and tag not in want:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for line in mod.run():
+                print(line, flush=True)
+            print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {tag} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

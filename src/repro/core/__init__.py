@@ -1,0 +1,55 @@
+"""Core library: the Jellyfish paper's contribution as composable JAX/numpy code.
+
+Public API re-exports — see DESIGN.md §3 for the per-module map.
+"""
+
+from .bisection import (
+    bollobas_bound,
+    kernighan_lin_bisection,
+    normalized_bisection,
+    spectral_lambda2,
+    spectral_lower_bound,
+)
+from .clos import ClosSpec, build_clos
+from .degree_diameter import CATALOG as DD_CATALOG
+from .degree_diameter import degree_diameter_graph
+from .expansion import add_switch, expand_to, remove_switch, rewire_free_ports
+from .failures import fail_links, fail_switches
+from .fattree import fattree, fattree_equipment
+from .flow import (
+    FlowResult,
+    lp_concurrent_flow,
+    lp_edge_concurrent_flow,
+    mw_concurrent_flow,
+    throughput,
+)
+from .jellyfish import jellyfish, jellyfish_heterogeneous, rrg
+from .legup import CostModel, ExpansionStage, jellyfish_arc, legup_arc
+from .metrics import apsp_hops, bollobas_diameter_bound, path_stats, PathStats
+from .mptcp import MptcpResult, mptcp_throughput
+from .placement import CablePlan, localized_jellyfish, plan_cables
+from .routing import PathSystem, build_path_system, k_shortest_paths
+from .swdc import swdc_hex3d, swdc_ring, swdc_torus2d
+from .topology import Topology, adj_to_edges, edges_to_adj
+from .traffic import Commodities, all_to_all_traffic, random_permutation_traffic
+
+__all__ = [
+    "Topology", "adj_to_edges", "edges_to_adj",
+    "jellyfish", "jellyfish_heterogeneous", "rrg",
+    "add_switch", "remove_switch", "rewire_free_ports", "expand_to",
+    "fattree", "fattree_equipment",
+    "swdc_ring", "swdc_torus2d", "swdc_hex3d",
+    "DD_CATALOG", "degree_diameter_graph",
+    "ClosSpec", "build_clos",
+    "CostModel", "ExpansionStage", "legup_arc", "jellyfish_arc",
+    "apsp_hops", "path_stats", "PathStats", "bollobas_diameter_bound",
+    "bollobas_bound", "spectral_lambda2", "spectral_lower_bound",
+    "kernighan_lin_bisection", "normalized_bisection",
+    "Commodities", "random_permutation_traffic", "all_to_all_traffic",
+    "PathSystem", "build_path_system", "k_shortest_paths",
+    "FlowResult", "mw_concurrent_flow", "lp_concurrent_flow",
+    "lp_edge_concurrent_flow", "throughput",
+    "MptcpResult", "mptcp_throughput",
+    "fail_links", "fail_switches",
+    "CablePlan", "localized_jellyfish", "plan_cables",
+]

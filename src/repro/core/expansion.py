@@ -1,0 +1,159 @@
+"""Incremental expansion of Jellyfish topologies (paper §4.2).
+
+To add a new switch ``u`` with ``r_u`` network ports: repeat ``r_u // 2``
+times — pick a random existing link (v, w) such that u is adjacent to neither
+endpoint, remove it, and add (u, v) and (u, w).  This consumes two of ``u``'s
+ports per swap and leaves the rest of the graph a (slightly smaller) random
+graph.  Heterogeneous port counts come for free.  An odd leftover port stays
+free (the paper permits matching it to another free port if one exists).
+
+The same procedure also implements *elastic shrink* (node removal): removing a
+random switch from an RRG leaves a random graph with a few free ports, which
+``rewire_free_ports`` re-matches (paper §4.3: "a random graph topology with a
+few failures is just another random graph topology of slightly smaller size").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["add_switch", "remove_switch", "rewire_free_ports", "expand_to"]
+
+
+class _Mut:
+    """Mutable adjacency view over a Topology for edge-swap sequences."""
+
+    def __init__(self, top: Topology):
+        self.top = top
+        self.nbrs = top.adjacency_sets()
+        self.edges = {tuple(e) for e in top.edges.tolist()}
+        self.free = top.free_ports().astype(np.int64)
+
+    def add(self, u: int, v: int) -> None:
+        a, b = (u, v) if u < v else (v, u)
+        assert (a, b) not in self.edges and a != b
+        self.edges.add((a, b))
+        self.nbrs[u].add(v)
+        self.nbrs[v].add(u)
+        self.free[u] -= 1
+        self.free[v] -= 1
+
+    def remove(self, u: int, v: int) -> None:
+        a, b = (u, v) if u < v else (v, u)
+        self.edges.discard((a, b))
+        self.nbrs[u].discard(v)
+        self.nbrs[v].discard(u)
+        self.free[u] += 1
+        self.free[v] += 1
+
+    def finish(self, name: str | None = None) -> Topology:
+        t = self.top.with_edges(self.edges, name=name)
+        t.validate()
+        return t
+
+
+def _splice(mut: _Mut, u: int, rng: np.random.Generator) -> bool:
+    """One edge swap: remove random (v, w) not touching u, add (u,v),(u,w)."""
+    edge_arr = list(mut.edges)
+    for j in rng.permutation(len(edge_arr)):
+        v, w = edge_arr[j]
+        if v == u or w == u or v in mut.nbrs[u] or w in mut.nbrs[u]:
+            continue
+        mut.remove(v, w)
+        mut.add(u, v)
+        mut.add(u, w)
+        return True
+    return False
+
+
+def rewire_free_ports(top: Topology, seed: int | np.random.Generator = 0) -> Topology:
+    """Greedily match free ports pairwise (non-adjacent endpoints only)."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    mut = _Mut(top)
+    stall = 0
+    while True:
+        cand = np.flatnonzero(mut.free > 0)
+        if len(cand) < 2 or stall > 200:
+            break
+        u, v = rng.choice(cand, size=2, replace=False)
+        u, v = int(u), int(v)
+        if u != v and v not in mut.nbrs[u]:
+            mut.add(u, v)
+            stall = 0
+        else:
+            stall += 1
+    return mut.finish(name=top.name)
+
+
+def add_switch(
+    top: Topology,
+    k_ports: int,
+    r_net: int,
+    seed: int | np.random.Generator = 0,
+    name: str | None = None,
+) -> Topology:
+    """Add one switch (rack) with ``k_ports`` ports, ``r_net`` to the network."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    n = top.n_switches
+    grown = Topology(
+        n_switches=n + 1,
+        edges=top.edges.copy(),
+        ports=np.concatenate([top.ports, [k_ports]]),
+        net_degree=np.concatenate([top.net_degree, [r_net]]),
+        name=name or top.name,
+        meta=dict(top.meta),
+    )
+    mut = _Mut(grown)
+    u = n
+    for _ in range(r_net // 2):
+        if not _splice(mut, u, rng):
+            break
+    out = mut.finish(name=name or top.name)
+    # Odd/unsatisfied leftover port: try matching against any other free port.
+    if out.free_ports()[u] > 0:
+        out = rewire_free_ports(out, rng)
+    return out
+
+
+def remove_switch(
+    top: Topology, victim: int, seed: int | np.random.Generator = 0
+) -> Topology:
+    """Remove a switch entirely (failure / decommission) and re-match ports."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    keep = np.array([i for i in range(top.n_switches) if i != victim])
+    remap = -np.ones(top.n_switches, dtype=np.int64)
+    remap[keep] = np.arange(len(keep))
+    edges = [
+        (remap[u], remap[v])
+        for u, v in top.edges
+        if u != victim and v != victim
+    ]
+    shrunk = Topology(
+        n_switches=top.n_switches - 1,
+        edges=np.asarray(sorted(tuple(sorted(e)) for e in edges), dtype=np.int64)
+        if edges
+        else np.zeros((0, 2), dtype=np.int64),
+        ports=top.ports[keep],
+        net_degree=top.net_degree[keep],
+        name=top.name,
+        meta=dict(top.meta),
+    )
+    return rewire_free_ports(shrunk, rng)
+
+
+def expand_to(
+    top: Topology,
+    n_switches: int,
+    k_ports: int | None = None,
+    r_net: int | None = None,
+    seed: int | np.random.Generator = 0,
+) -> Topology:
+    """Grow ``top`` to ``n_switches`` by repeated single-switch additions."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    k = k_ports if k_ports is not None else int(top.ports[-1])
+    r = r_net if r_net is not None else int(top.net_degree[-1])
+    while top.n_switches < n_switches:
+        top = add_switch(top, k, r, rng)
+    return top

@@ -1,0 +1,55 @@
+"""Failure models (paper §4.3, Fig 7).
+
+Uniform-random link failures and switch failures.  A failed Jellyfish is
+"just another random graph": the degraded Topology is a first-class Topology
+and every metric/solver runs on it unchanged.  ``repro.runtime.elastic`` uses
+the same machinery to re-plan a training mesh after node loss.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["fail_links", "fail_switches"]
+
+
+def fail_links(
+    top: Topology, fraction: float, seed: int | np.random.Generator = 0
+) -> Topology:
+    """Remove ``fraction`` of switch-switch links uniformly at random."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    e = top.n_edges
+    n_fail = int(round(fraction * e))
+    if n_fail == 0:
+        return top.copy()
+    keep = np.ones(e, dtype=bool)
+    keep[rng.choice(e, size=n_fail, replace=False)] = False
+    out = top.copy()
+    out.edges = top.edges[keep]
+    out.name = f"{top.name}+fail{fraction:.0%}"
+    return out
+
+
+def fail_switches(
+    top: Topology, fraction: float, seed: int | np.random.Generator = 0
+) -> Topology:
+    """Mark switches failed: drop all their links (servers on them go dark)."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    n_fail = int(round(fraction * top.n_switches))
+    if n_fail == 0:
+        return top.copy()
+    dead = set(rng.choice(top.n_switches, size=n_fail, replace=False).tolist())
+    keep = np.array([(u not in dead and v not in dead) for u, v in top.edges], dtype=bool)
+    out = top.copy()
+    out.edges = top.edges[keep]
+    # dead switches host no usable servers
+    dead_arr = np.array(sorted(dead), dtype=np.int64)
+    out.net_degree = out.net_degree.copy()
+    out.ports = out.ports.copy()
+    out.ports[dead_arr] = 0
+    out.net_degree[dead_arr] = 0
+    out.name = f"{top.name}+swfail{fraction:.0%}"
+    out.meta = {**top.meta, "dead_switches": sorted(int(d) for d in dead)}
+    return out

@@ -1,0 +1,254 @@
+"""Maximum concurrent flow over a k-shortest-path system (paper §4).
+
+The paper computes "optimal routing" throughput with CPLEX on the exact
+multicommodity LP.  We provide two solvers over an explicit path system:
+
+* ``lp_concurrent_flow``   — exact LP (scipy/HiGHS), the oracle.  Restricted to
+  the path system, but with enough paths (k >= 8 and slack >= 2 on these
+  low-diameter graphs) it matches the edge-formulation optimum to <2%
+  (validated in tests on small instances against an edge-based LP).
+* ``mw_concurrent_flow``   — jitted JAX mirror-descent / multiplicative-weights
+  iteration minimizing the smoothed max edge load.  This is the TPU-shaped
+  solver: its inner loop is exactly the gather/segment-sum ("congestion")
+  primitive implemented by ``repro.kernels.congestion``.
+
+Maximum concurrent flow: maximize alpha s.t. each commodity i routes
+``alpha * d_i`` and edge loads respect capacities.  For the capacity question
+"does this topology support every server at full rate" the test is alpha >= 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .routing import PathSystem
+
+__all__ = [
+    "FlowResult",
+    "mw_concurrent_flow",
+    "lp_concurrent_flow",
+    "lp_edge_concurrent_flow",
+    "throughput",
+]
+
+
+@dataclasses.dataclass
+class FlowResult:
+    alpha: float  # max concurrent fraction: every commodity ships alpha * d_i
+    rates: np.ndarray  # (P,) per-path rates of the feasible scaled solution
+    max_load: float  # max relative edge load of the *unscaled* routing
+    method: str
+    iters: int = 0
+
+    def normalized_throughput(self) -> float:
+        """Per-server normalized throughput, capped at line rate (<= 1)."""
+        return float(min(self.alpha, 1.0))
+
+
+# --------------------------------------------------------------------------- #
+# JAX multiplicative-weights solver
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _mw_solve(
+    path_edges: jnp.ndarray,  # (P, L) int32 padded with E
+    owner: jnp.ndarray,  # (P,) int32
+    demands: jnp.ndarray,  # (K,) f32
+    inv_cap: jnp.ndarray,  # (E,) f32  (1 / capacity)
+    n_comm: int,
+    iters: int,
+):
+    P, L = path_edges.shape
+    E = inv_cap.shape[0]
+    K = demands.shape[0]
+
+    inv_cap_pad = jnp.concatenate([inv_cap, jnp.zeros((1,), jnp.float32)])
+    # per-path gather of 1/cap for each hop (sentinel hop contributes 0)
+    hop_inv_cap = inv_cap_pad[path_edges]  # (P, L)
+
+    def seg_norm(x):
+        s = jnp.zeros((K,), jnp.float32).at[owner].add(x)
+        return x / s[owner]
+
+    def loads_of(rates):
+        flat = jnp.repeat(rates, L) * hop_inv_cap.reshape(-1)
+        rel = jnp.zeros((E + 1,), jnp.float32).at[path_edges.reshape(-1)].add(flat)
+        return rel[:E]  # relative load per edge
+
+    x0 = seg_norm(jnp.ones((P,), jnp.float32))
+
+    def body(carry, t):
+        x, best_alpha, best_x = carry
+        rates = x * demands[owner]
+        rel = loads_of(rates)
+        mx = jnp.max(rel)
+        alpha = 1.0 / jnp.maximum(mx, 1e-12)
+        better = alpha > best_alpha
+        best_alpha = jnp.where(better, alpha, best_alpha)
+        best_x = jnp.where(better, x, best_x)
+        # smoothed-max gradient; GEOMETRIC temperature anneal (0.2 -> 0.005 of
+        # max load) + 1/sqrt(t) step decay: measured 0.950 -> 0.985 of the LP
+        # optimum at 400 iterations on RRG(512,24,18) (§Perf S1)
+        frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters)
+        tau = jnp.maximum(mx, 1e-12) * frac
+        w = jax.nn.softmax(rel / tau)
+        w_pad = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+        g = jnp.sum(w_pad[path_edges] * hop_inv_cap, axis=1) * demands[owner]
+        g = g / jnp.maximum(jnp.max(g), 1e-12)
+        eta = 2.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
+        x = seg_norm(x * jnp.exp(-eta * g))
+        return (x, best_alpha, best_x), None
+
+    (x, best_alpha, best_x), _ = jax.lax.scan(
+        body, (x0, jnp.float32(0.0), x0), jnp.arange(iters)
+    )
+    # one final evaluation of the last iterate
+    rates = x * demands[owner]
+    mx = jnp.max(loads_of(rates))
+    alpha = 1.0 / jnp.maximum(mx, 1e-12)
+    better = alpha > best_alpha
+    best_alpha = jnp.where(better, alpha, best_alpha)
+    best_x = jnp.where(better, x, best_x)
+    best_rates = best_x * demands[owner] * jnp.minimum(best_alpha, 1.0)
+    return best_alpha, best_rates, 1.0 / best_alpha
+
+
+def mw_concurrent_flow(ps: PathSystem, iters: int = 400) -> FlowResult:
+    if ps.n_paths == 0:
+        return FlowResult(0.0, np.zeros(0), np.inf, "mw", 0)
+    alpha, rates, max_load = _mw_solve(
+        jnp.asarray(ps.path_edges),
+        jnp.asarray(ps.path_owner),
+        jnp.asarray(ps.demands, dtype=jnp.float32),
+        jnp.asarray(1.0 / ps.capacities, dtype=jnp.float32),
+        ps.n_commodities,
+        iters,
+    )
+    return FlowResult(
+        float(alpha), np.asarray(rates), float(max_load), "mw", iters
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Exact LP solvers (scipy / HiGHS)
+# --------------------------------------------------------------------------- #
+
+
+def lp_concurrent_flow(ps: PathSystem, alpha_cap: float = 8.0) -> FlowResult:
+    """Exact max concurrent flow restricted to the path system."""
+    import scipy.sparse as sp
+    from scipy.optimize import linprog
+
+    P = ps.n_paths
+    if P == 0:
+        return FlowResult(0.0, np.zeros(0), np.inf, "lp")
+    E, K = ps.n_slots, ps.n_commodities
+    rows, cols, vals = [], [], []
+    # directed-slot capacity rows
+    for p in range(P):
+        for e in ps.path_edges[p][: ps.path_len[p]]:
+            rows.append(int(e))
+            cols.append(p)
+            vals.append(1.0)
+    # commodity rows: alpha * d_i - sum_p r_p <= 0
+    for p in range(P):
+        rows.append(E + int(ps.path_owner[p]))
+        cols.append(p)
+        vals.append(-1.0)
+    rows.extend(E + np.arange(K))
+    cols.extend([P] * K)
+    vals.extend(ps.demands.astype(np.float64))
+    A = sp.coo_matrix((vals, (rows, cols)), shape=(E + K, P + 1)).tocsr()
+    b = np.concatenate([ps.capacities.astype(np.float64), np.zeros(K)])
+    c = np.zeros(P + 1)
+    c[P] = -1.0
+    bounds = [(0, None)] * P + [(0, alpha_cap)]
+    res = linprog(c, A_ub=A, b_ub=b, bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"LP failed: {res.message}")
+    alpha = float(res.x[P])
+    rates = res.x[:P] * min(1.0, alpha) / max(alpha, 1e-12)
+    return FlowResult(alpha, rates, 1.0 / max(alpha, 1e-12), "lp")
+
+
+def lp_edge_concurrent_flow(top, comm, alpha_cap: float = 8.0) -> float:
+    """Edge-formulation exact max concurrent flow (small instances only).
+
+    Used in tests to validate that the path system (k paths, bounded slack)
+    is rich enough.  Variables: per-commodity directed edge flows.
+    """
+    import scipy.sparse as sp
+    from scipy.optimize import linprog
+
+    N = top.n_switches
+    E2 = 2 * top.n_edges  # directed copies (full-duplex: unit cap per direction)
+    K = comm.k
+    src, dst, dem = comm.src, comm.dst, comm.demand
+    # directed edge list
+    de = np.concatenate([top.edges, top.edges[:, ::-1]], axis=0)  # (E2, 2)
+    nvar = K * E2 + 1
+    rows, cols, vals = [], [], []
+    beq = []
+    # flow conservation per commodity per node (except via demand at src/dst)
+    r = 0
+    for i in range(K):
+        for v in range(N):
+            # sum_out - sum_in - alpha*d*(v==src) + alpha*d*(v==dst) = 0
+            out_ids = np.flatnonzero(de[:, 0] == v)
+            in_ids = np.flatnonzero(de[:, 1] == v)
+            for j in out_ids:
+                rows.append(r)
+                cols.append(i * E2 + j)
+                vals.append(1.0)
+            for j in in_ids:
+                rows.append(r)
+                cols.append(i * E2 + j)
+                vals.append(-1.0)
+            coef = 0.0
+            if v == src[i]:
+                coef = -dem[i]
+            elif v == dst[i]:
+                coef = dem[i]
+            if coef != 0.0:
+                rows.append(r)
+                cols.append(nvar - 1)
+                vals.append(coef)
+            beq.append(0.0)
+            r += 1
+    Aeq = sp.coo_matrix((vals, (rows, cols)), shape=(r, nvar)).tocsr()
+    # capacity rows: each DIRECTED edge has unit capacity (full duplex)
+    rows2, cols2, vals2 = [], [], []
+    for e in range(E2):
+        for i in range(K):
+            rows2.append(e)
+            cols2.append(i * E2 + e)
+            vals2.append(1.0)
+    A_ub = sp.coo_matrix((vals2, (rows2, cols2)), shape=(E2, nvar)).tocsr()
+    b_ub = np.ones(E2)
+    c = np.zeros(nvar)
+    c[-1] = -1.0
+    bounds = [(0, None)] * (nvar - 1) + [(0, alpha_cap)]
+    res = linprog(
+        c, A_ub=A_ub, b_ub=b_ub, A_eq=Aeq, b_eq=np.asarray(beq), bounds=bounds,
+        method="highs",
+    )
+    if not res.success:
+        raise RuntimeError(f"edge LP failed: {res.message}")
+    return float(res.x[-1])
+
+
+def throughput(ps: PathSystem, method: str = "auto", iters: int = 400) -> FlowResult:
+    """Concurrent-flow throughput with automatic solver selection."""
+    if method == "lp" or (method == "auto" and ps.n_paths <= 20000):
+        try:
+            return lp_concurrent_flow(ps)
+        except Exception:  # pragma: no cover - LP solver hiccup
+            return mw_concurrent_flow(ps, iters=iters)
+    return mw_concurrent_flow(ps, iters=iters)

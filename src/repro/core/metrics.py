@@ -1,0 +1,90 @@
+"""Path-length metrics (paper §4.1 "Path Length", Fig 4).
+
+APSP on unit-weight graphs via dense frontier BFS: ``R_{t+1} = R_t | R_t @ A``
+computed with BLAS fp32 matmuls.  For N ~ 3200 (the paper's largest path-length
+experiment) one step is ~65 GFLOP, which single-core BLAS clears in seconds;
+the whole APSP needs ~diameter (≈4) steps.  The same min-plus formulation is
+what the Pallas kernel (`repro.kernels.minplus`) implements for TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["apsp_hops", "PathStats", "path_stats", "bollobas_diameter_bound"]
+
+_INF = np.float32(np.inf)
+
+
+def apsp_hops(adj: np.ndarray, max_steps: int | None = None) -> np.ndarray:
+    """All-pairs hop distance via BLAS frontier expansion.
+
+    Returns (N, N) float32 with inf for unreachable pairs and 0 on the diagonal.
+    """
+    n = adj.shape[0]
+    a = (adj != 0).astype(np.float32)
+    reach = np.eye(n, dtype=np.float32)
+    dist = np.full((n, n), _INF, dtype=np.float32)
+    np.fill_diagonal(dist, 0.0)
+    steps = max_steps if max_steps is not None else n
+    for step in range(1, steps + 1):
+        new_reach = (reach @ a) > 0
+        newly = new_reach & (dist == _INF)
+        if not newly.any():
+            break
+        dist[newly] = step
+        reach = new_reach.astype(np.float32)
+        reach[dist < _INF] = 1.0  # keep everything reached so far in the frontier set
+    return dist
+
+
+@dataclasses.dataclass
+class PathStats:
+    mean: float
+    diameter: float
+    p50: float
+    p99: float
+    p9999: float
+    histogram: dict[int, int]
+    connected: bool
+
+    def __str__(self) -> str:
+        return (
+            f"mean={self.mean:.3f} diam={self.diameter:.0f} p50={self.p50:.0f} "
+            f"p99={self.p99:.0f} p99.99={self.p9999:.0f} connected={self.connected}"
+        )
+
+
+def path_stats(top: Topology | np.ndarray) -> PathStats:
+    """Switch-to-switch shortest-path statistics over all ordered pairs."""
+    adj = top.adjacency() if isinstance(top, Topology) else np.asarray(top)
+    d = apsp_hops(adj)
+    n = d.shape[0]
+    off = ~np.eye(n, dtype=bool)
+    vals = d[off]
+    finite = vals[np.isfinite(vals)]
+    connected = finite.size == vals.size
+    if finite.size == 0:
+        return PathStats(np.nan, np.nan, np.nan, np.nan, np.nan, {}, connected)
+    hist_keys, hist_counts = np.unique(finite.astype(np.int64), return_counts=True)
+    return PathStats(
+        mean=float(finite.mean()),
+        diameter=float(finite.max()),
+        p50=float(np.percentile(finite, 50)),
+        p99=float(np.percentile(finite, 99)),
+        p9999=float(np.percentile(finite, 99.99)),
+        histogram={int(k): int(c) for k, c in zip(hist_keys, hist_counts)},
+        connected=connected,
+    )
+
+
+def bollobas_diameter_bound(n: int, r: int, eps: float = 0.001) -> float:
+    """Bollobás & de la Vega: diam(RRG) <= 1 + ceil(log_{r-1}((2+eps) r N log N))."""
+    if r <= 2:
+        return float("inf")
+    val = (2.0 + eps) * r * n * np.log(n)
+    return 1.0 + float(np.ceil(np.log(val) / np.log(r - 1)))

@@ -1,0 +1,182 @@
+"""k-shortest-path routing (paper §5).
+
+The paper routes on k=8 shortest paths per switch pair (Yen's algorithm).  For
+unit-weight graphs we implement the equivalent *near-shortest path
+enumeration*: precompute the hop-distance matrix once (BLAS APSP), then DFS
+from the source with the admissibility prune
+
+    len(prefix) + 1 + dist(next, dst) <= dist(src, dst) + slack,
+
+growing ``slack`` until at least k simple paths exist.  This returns exactly
+the k shortest simple paths (ties broken arbitrarily) and is orders of
+magnitude faster than repeated-Dijkstra Yen on these graphs.  Tests
+cross-validate against ``networkx.shortest_simple_paths``.
+
+The routing tables are materialized as a ``PathSystem``: a padded
+(P, L_max) edge-id matrix plus per-path commodity ownership — the dense,
+MXU/segment-sum-friendly representation consumed by the JAX flow solvers and
+the Pallas congestion kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .metrics import apsp_hops
+from .topology import Topology
+from .traffic import Commodities
+
+__all__ = ["PathSystem", "k_shortest_paths", "build_path_system"]
+
+
+def _enumerate_near_shortest(
+    nbrs: list[np.ndarray],
+    dist_to_t: np.ndarray,
+    s: int,
+    t: int,
+    length_cap: float,
+    max_enum: int,
+) -> list[list[int]]:
+    """All simple s->t paths with length <= length_cap (node sequences)."""
+    paths: list[list[int]] = []
+    # Iterative DFS; stack holds (node, remaining_budget, path_so_far).
+    stack: list[tuple[int, float, list[int]]] = [(s, length_cap, [s])]
+    while stack and len(paths) < max_enum:
+        u, budget, path = stack.pop()
+        if u == t:
+            paths.append(path)
+            continue
+        if budget <= 0:
+            continue
+        in_path = set(path)
+        for v in nbrs[u]:
+            v = int(v)
+            if v in in_path:
+                continue
+            if 1 + dist_to_t[v] <= budget:
+                stack.append((v, budget - 1, path + [v]))
+    return paths
+
+
+def k_shortest_paths(
+    top: Topology,
+    pairs: list[tuple[int, int]],
+    k: int = 8,
+    max_slack: int = 4,
+    max_enum: int = 4096,
+    dist: np.ndarray | None = None,
+) -> list[list[list[int]]]:
+    """k shortest simple paths (node sequences) for each (src, dst) pair."""
+    if dist is None:
+        dist = apsp_hops(top.adjacency())
+    nbrs = top.adjacency_lists()
+    out: list[list[list[int]]] = []
+    for s, t in pairs:
+        base = dist[s, t]
+        if not np.isfinite(base):
+            out.append([])
+            continue
+        found: list[list[int]] = []
+        for slack in range(max_slack + 1):
+            found = _enumerate_near_shortest(
+                nbrs, dist[:, t], s, t, base + slack, max_enum
+            )
+            if len(found) >= k:
+                break
+        found.sort(key=len)
+        out.append(found[:k])
+    return out
+
+
+@dataclasses.dataclass
+class PathSystem:
+    """Padded path-edge representation of a routing table over commodities.
+
+    Links are full duplex: undirected edge ``e`` of the topology contributes
+    two *directed capacity slots*, ``e`` (low->high endpoint) and
+    ``e + n_edges`` (high->low).  ``path_edges[p, j]`` is the directed slot of
+    hop j of path p, padded with ``n_slots`` (a sentinel).
+    ``path_owner[p]`` is the commodity index.
+    """
+
+    n_edges: int  # undirected edge count E of the topology
+    path_edges: np.ndarray  # (P, Lmax) int32 directed slots, padded with 2E
+    path_len: np.ndarray  # (P,) int32
+    path_owner: np.ndarray  # (P,) int32 commodity index
+    demands: np.ndarray  # (K,) float32
+    capacities: np.ndarray  # (2E,) float32, per direction
+    n_commodities: int
+    node_paths: list[list[list[int]]] | None = None  # per commodity, node seqs
+    unrouted: np.ndarray | None = None  # (K0,) bool: commodities with no path
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.capacities)
+
+    @property
+    def n_paths(self) -> int:
+        return len(self.path_edges)
+
+    def loads(self, rates: np.ndarray) -> np.ndarray:
+        """Per-directed-slot load for per-path rates (numpy reference)."""
+        load = np.zeros(self.n_slots + 1, dtype=np.float64)
+        np.add.at(
+            load,
+            self.path_edges.reshape(-1),
+            np.repeat(rates, self.path_edges.shape[1]),
+        )
+        return load[: self.n_slots]
+
+
+def build_path_system(
+    top: Topology,
+    comm: Commodities,
+    k: int = 8,
+    max_slack: int = 4,
+    dist: np.ndarray | None = None,
+    keep_node_paths: bool = False,
+) -> PathSystem:
+    """Routing tables (k shortest paths) for every commodity of ``comm``."""
+    eidx = top.edge_index()
+    pairs = list(zip(comm.src.tolist(), comm.dst.tolist()))
+    all_paths = k_shortest_paths(top, pairs, k=k, max_slack=max_slack, dist=dist)
+
+    unrouted = np.array([len(p) == 0 for p in all_paths], dtype=bool)
+    E = top.n_edges
+    path_edge_ids: list[list[int]] = []
+    owner: list[int] = []
+    kept = 0
+    for i, paths in enumerate(all_paths):
+        if not paths:
+            continue
+        for nodes in paths:
+            ids = []
+            for a, b in zip(nodes[:-1], nodes[1:]):
+                # directed slot: low->high uses e, high->low uses e + E
+                if a < b:
+                    ids.append(eidx[(a, b)])
+                else:
+                    ids.append(eidx[(b, a)] + E)
+            path_edge_ids.append(ids)
+            owner.append(kept)
+        kept += 1
+
+    lmax = max((len(p) for p in path_edge_ids), default=1)
+    P = len(path_edge_ids)
+    pe = np.full((P, lmax), 2 * E, dtype=np.int32)
+    for p, ids in enumerate(path_edge_ids):
+        pe[p, : len(ids)] = ids
+    demands = comm.demand[~unrouted].astype(np.float32)
+    return PathSystem(
+        n_edges=E,
+        path_edges=pe,
+        path_len=np.array([len(p) for p in path_edge_ids], dtype=np.int32),
+        path_owner=np.asarray(owner, dtype=np.int32),
+        demands=demands,
+        capacities=np.ones(2 * E, dtype=np.float32),
+        n_commodities=kept,
+        node_paths=all_paths if keep_node_paths else None,
+        unrouted=unrouted,
+    )

@@ -1,0 +1,94 @@
+"""Traffic models (paper §4 "Evaluation methodology").
+
+The paper's workhorse is *random permutation traffic*: every server sends at
+full line rate to exactly one other server and receives from exactly one
+(a uniform-random permutation with no fixed points).  Server-level demands are
+aggregated to switch-level commodities; pairs landing on the same switch never
+touch the network and are dropped (trivially satisfied at full rate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["Commodities", "random_permutation_traffic", "all_to_all_traffic"]
+
+
+@dataclasses.dataclass
+class Commodities:
+    """Switch-level demands: commodity i ships ``demand[i]`` from src to dst."""
+
+    src: np.ndarray  # (K,) switch ids
+    dst: np.ndarray  # (K,) switch ids
+    demand: np.ndarray  # (K,) float, in units of server line rate
+    n_flows: int  # server-level flow count (incl. same-switch trivial flows)
+
+    @property
+    def k(self) -> int:
+        return len(self.src)
+
+    def total_demand(self) -> float:
+        return float(self.demand.sum())
+
+
+def _server_to_switch(top: Topology) -> np.ndarray:
+    """(n_servers,) switch id hosting each server."""
+    return np.repeat(np.arange(top.n_switches), top.servers_per_switch)
+
+
+def random_permutation_traffic(
+    top: Topology, seed: int | np.random.Generator = 0
+) -> Commodities:
+    """Uniform random derangement of servers, aggregated per switch pair."""
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    host = _server_to_switch(top)
+    n = len(host)
+    if n < 2:
+        raise ValueError("need at least two servers for permutation traffic")
+    perm = rng.permutation(n)
+    # Fix fixed points by cyclic shift among them (keeps permutation uniform enough;
+    # the paper just requires "sends to a single other server").
+    fixed = np.flatnonzero(perm == np.arange(n))
+    if len(fixed) == 1:
+        other = (fixed[0] + 1) % n
+        perm[fixed[0]], perm[other] = perm[other], perm[fixed[0]]
+    elif len(fixed) > 1:
+        perm[fixed] = perm[np.roll(fixed, 1)]
+    src_sw = host
+    dst_sw = host[perm]
+    cross = src_sw != dst_sw
+    pair = src_sw[cross] * top.n_switches + dst_sw[cross]
+    uniq, counts = np.unique(pair, return_counts=True)
+    return Commodities(
+        src=(uniq // top.n_switches).astype(np.int64),
+        dst=(uniq % top.n_switches).astype(np.int64),
+        demand=counts.astype(np.float64),
+        n_flows=n,
+    )
+
+
+def all_to_all_traffic(top: Topology) -> Commodities:
+    """Uniform all-to-all at aggregate rate 1 per server (stress benchmark)."""
+    host_counts = top.servers_per_switch.astype(np.float64)
+    n_srv = host_counts.sum()
+    src, dst, dem = [], [], []
+    for i in range(top.n_switches):
+        if host_counts[i] == 0:
+            continue
+        for j in range(top.n_switches):
+            if i == j or host_counts[j] == 0:
+                continue
+            src.append(i)
+            dst.append(j)
+            # each server spreads rate 1 over all other servers
+            dem.append(host_counts[i] * host_counts[j] / max(n_srv - 1, 1))
+    return Commodities(
+        np.asarray(src, dtype=np.int64),
+        np.asarray(dst, dtype=np.int64),
+        np.asarray(dem, dtype=np.float64),
+        n_flows=int(n_srv),
+    )

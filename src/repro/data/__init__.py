@@ -1,0 +1,5 @@
+"""Data pipelines."""
+
+from .pipeline import MemmapTokens, Prefetcher, SyntheticLM, make_batches
+
+__all__ = ["SyntheticLM", "MemmapTokens", "Prefetcher", "make_batches"]

@@ -1,0 +1,117 @@
+"""FabricModel: the physical cluster interconnect as a first-class object.
+
+This is where the paper becomes a *feature of the training framework*: the
+launcher instantiates a FabricModel for the cluster's inter-pod network
+(``jellyfish`` by default, ``fattree`` as the structured baseline), embeds
+the mesh's cross-pod axis into it, and exports effective bandwidths that the
+roofline analysis and collective-algorithm selection consume.
+
+Elastic scaling and fault tolerance ride the paper's machinery directly:
+``expand(n)`` is incremental Jellyfish expansion (§4.2); ``fail(frac)`` /
+``remove(pod)`` is §4.3 — the degraded fabric is just a smaller random
+graph, so the runtime re-embeds and continues instead of halting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import expansion, failures
+from ..core.fattree import fattree
+from ..core.jellyfish import jellyfish
+from ..core.metrics import path_stats
+from ..core.topology import Topology
+from .collectives import LinkSpec
+from .embedding import RingEmbedding, all_to_all_congestion, embed_ring
+
+__all__ = ["FabricModel", "make_fabric"]
+
+
+@dataclasses.dataclass
+class FabricModel:
+    """Physical inter-pod fabric + link model + cached ring embedding."""
+
+    topology: Topology
+    link: LinkSpec
+    name: str = "fabric"
+    _ring: RingEmbedding | None = None
+
+    # ------------------------------------------------------------------ #
+    def ring(self, members: np.ndarray | None = None, refresh: bool = False) -> RingEmbedding:
+        if self._ring is None or refresh or members is not None:
+            emb = embed_ring(self.topology, members)
+            if members is None:
+                self._ring = emb
+            return emb
+        return self._ring
+
+    def ring_link(self, members: np.ndarray | None = None) -> LinkSpec:
+        """LinkSpec with efficiency scaled by the ring embedding congestion."""
+        emb = self.ring(members)
+        return LinkSpec(self.link.bandwidth, self.link.latency, emb.efficiency)
+
+    def a2a_efficiency(self, members: np.ndarray | None = None) -> float:
+        c = all_to_all_congestion(self.topology, members)
+        return 1.0 / max(c, 1.0)
+
+    def describe(self) -> str:
+        st = path_stats(self.topology)
+        emb = self.ring()
+        return (
+            f"{self.name}: {self.topology.describe()} | paths {st} | {emb.summary()}"
+        )
+
+    # ----------------------- elasticity / faults ---------------------- #
+    def expand(self, n_new: int, seed: int = 0) -> "FabricModel":
+        """Add pods via the paper's incremental expansion; re-embeds rings."""
+        top = self.topology
+        k = int(top.ports[-1])
+        r = int(top.net_degree[-1])
+        top = expansion.expand_to(top, top.n_switches + n_new, k, r, seed=seed)
+        return FabricModel(top, self.link, self.name)
+
+    def fail(self, link_fraction: float, seed: int = 0) -> "FabricModel":
+        return FabricModel(
+            failures.fail_links(self.topology, link_fraction, seed), self.link, self.name
+        )
+
+    def remove(self, pod: int, seed: int = 0) -> "FabricModel":
+        return FabricModel(
+            expansion.remove_switch(self.topology, pod, seed), self.link, self.name
+        )
+
+
+def make_fabric(
+    kind: str = "jellyfish",
+    n_pods: int = 2,
+    degree: int = 4,
+    link_gbps: float = 50.0,
+    seed: int = 0,
+) -> FabricModel:
+    """Fabric factory for the launcher (``--fabric jellyfish|fattree``).
+
+    For tiny pod counts (the 2-pod dry-run) the "random graph" degenerates
+    to parallel links / a clique — that is fine; the machinery matters at
+    100s-1000s of pods, which benchmarks/fabric_scale.py exercises.
+    """
+    link = LinkSpec(bandwidth=link_gbps * 1e9)
+    if kind == "jellyfish":
+        r = min(degree, max(n_pods - 1, 1))
+        top = jellyfish(n_pods, r + 1, r, seed=seed) if n_pods > 2 else _pair(n_pods)
+        return FabricModel(top, link, f"jellyfish-fabric({n_pods} pods)")
+    if kind == "fattree":
+        # smallest fat-tree with >= n_pods edge switches; pods sit on edge switches
+        k = 4
+        while (k * k) // 2 < n_pods:
+            k += 2
+        top = fattree(k)
+        return FabricModel(top, link, f"fattree-fabric(k={k})")
+    raise ValueError(kind)
+
+
+def _pair(n: int) -> Topology:
+    """Degenerate 1-2 pod fabric."""
+    edges = [(0, 1)] if n == 2 else []
+    return Topology.regular(n, 2, 1, edges, name=f"pair({n})", kind="pair")

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+- ``minplus``    — tropical (min,+) matmul: APSP by matrix powering (Fig 4).
+- ``power``      — blocked MXU matmul: spectral bisection power iteration (Fig 1/6).
+- ``congestion`` — fused (B^T r, B w): the multicommodity-flow inner loop (Fig 1c/8/9).
+
+``ops`` holds the jit'd dispatch wrappers (kernel on TPU, jnp oracle on CPU),
+``ref`` the pure-jnp oracles used as ground truth in tests.
+"""
+
+from . import ops, ref
+from .congestion import congestion_pallas
+from .minplus import minplus_pallas
+from .power import matmul_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "minplus_pallas",
+    "matmul_pallas",
+    "congestion_pallas",
+]

@@ -1,0 +1,105 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+TPU is the *target*; this container is CPU-only.  Policy:
+
+* ``backend="auto"`` (default): run the Pallas kernel on TPU, the pure-jnp
+  reference (XLA-compiled, fast) on CPU.  Production code calls these and is
+  correct everywhere.
+* ``backend="pallas"``: force the kernel in interpret mode — the validation
+  path used by tests (executes the kernel body on CPU).
+* ``backend="ref"``: force the oracle.
+
+``apsp_minplus`` is the TPU-shaped APSP (min-plus squaring); CPU production
+code keeps the BLAS frontier-BFS in ``core.metrics``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .congestion import congestion_pallas
+from .minplus import minplus_pallas
+from .power import matmul_pallas
+
+__all__ = [
+    "minplus",
+    "matmul",
+    "congestion",
+    "apsp_minplus",
+    "power_iteration_lambda2",
+]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def minplus(a, b, backend: str = "auto", **blocks):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.minplus_ref(a, b)
+    interpret = not _on_tpu()
+    return minplus_pallas(a, b, interpret=interpret, **blocks)
+
+
+def matmul(a, b, backend: str = "auto", **blocks):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.matmul_ref(a, b)
+    interpret = not _on_tpu()
+    return matmul_pallas(a, b, interpret=interpret, **blocks)
+
+
+def congestion(incidence, rates, prices, backend: str = "auto", **blocks):
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        return ref.congestion_ref(incidence, rates, prices)
+    interpret = not _on_tpu()
+    return congestion_pallas(incidence, rates, prices, interpret=interpret, **blocks)
+
+
+def apsp_minplus(adj, backend: str = "auto") -> jax.Array:
+    """All-pairs hop distances by min-plus squaring of the adjacency."""
+    n = adj.shape[0]
+    d = jnp.where(jnp.asarray(adj) > 0, 1.0, jnp.inf)
+    d = jnp.where(jnp.eye(n, dtype=bool), 0.0, d)
+    steps = 0
+    m = 1
+    while m < max(n - 1, 1):  # enough squarings to cover any diameter
+        m *= 2
+        steps += 1
+    for _ in range(steps):
+        d = minplus(d, d, backend=backend)
+    return d
+
+
+def power_iteration_lambda2(
+    adj, iters: int = 300, block: int = 8, backend: str = "auto", seed: int = 0
+):
+    """lambda_2 of the Laplacian via block power iteration on B = cI - L.
+
+    The matmul (B @ V) is the kernel; orthogonalization against the known
+    top eigenvector (all-ones) and QR re-orthonormalization run in jnp.
+    """
+    a = jnp.asarray(adj, dtype=jnp.float32)
+    n = a.shape[0]
+    deg = a.sum(axis=1)
+    c = 2.0 * jnp.max(deg) + 1.0
+    ones = jnp.ones((n, 1), jnp.float32) / jnp.sqrt(n)
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (n, block), jnp.float32)
+
+    def step(v, _):
+        v = v - ones @ (ones.T @ v)
+        q, _ = jnp.linalg.qr(v)
+        # B @ q = c q - D q + A q ; the A @ q matmul is the kernel call
+        w = c * q - deg[:, None] * q + matmul(a, q, backend=backend)
+        return w, None
+
+    for _ in range(iters):
+        v, _ = step(v, None)
+    v = v - ones @ (ones.T @ v)
+    q, _ = jnp.linalg.qr(v)
+    w = c * q - deg[:, None] * q + matmul(a, q, backend=backend)
+    lam_b = jnp.diag(q.T @ w)
+    lam2 = c - jnp.max(lam_b)
+    return jnp.maximum(lam2, 0.0)

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); this module therefore imports everything lazily below
+them.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # resumable
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Each cell writes ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` with
+memory_analysis, cost_analysis, HLO-derived roofline inputs (trip-count-aware
+FLOPs / HBM bytes / collective wire bytes; see repro.roofline.hlo_stats) and
+the three roofline terms.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import get, names  # noqa: E402
+from ..models import init_cache, init_params  # noqa: E402
+from ..models.frontends import N_VIT_PATCHES  # noqa: E402
+from ..roofline.analysis import HW, roofline_terms  # noqa: E402
+from ..roofline.hlo_stats import analyze_hlo  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .steps import (  # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_shardings,
+)
+from ..optim.adamw import adamw_init  # noqa: E402
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+SDS = jax.ShapeDtypeStruct
+
+
+def microbatches_for(cfg, shape) -> int:
+    if shape["kind"] != "train":
+        return 1
+    n = cfg.param_count()
+    if cfg.family == "rwkv6":
+        return 1  # §Perf R2: full-mesh DP needs the whole batch in one piece
+    if cfg.family == "moe" and n > 2e10:
+        return 8  # mixtral: remat carries cap the microbatch size
+    if n > 2e10:
+        return 4  # §Perf Q3: fewer microbatches = fewer per-layer collectives
+    if n > 5e9:
+        return 4
+    return 2
+
+
+def input_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape["batch"], shape["seq"]
+    if shape["kind"] in ("train", "prefill"):
+        if cfg.frontend == "vit":
+            return {
+                "inputs_embeds": SDS((b, N_VIT_PATCHES, cfg.d_model), jnp.bfloat16),
+                "tokens": SDS((b, s - N_VIT_PATCHES), jnp.int32),
+            }
+        if cfg.frontend == "encodec":
+            return {
+                "inputs_embeds": SDS((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": SDS((b, s), jnp.int32),
+            }
+        return {"tokens": SDS((b, s), jnp.int32)}
+    # decode
+    return {"token": SDS((b,), jnp.int32), "pos": SDS((), jnp.int32)}
+
+
+def _spec_tree(f, *args, **kw):
+    return jax.eval_shape(lambda: f(*args, **kw))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, hw: HW = HW()) -> dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped",
+            "reason": "pure full-attention arch: 500k dense-KV decode is "
+                      "out of scope per DESIGN.md §4",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+
+    params_spec = _spec_tree(init_params, cfg, jax.random.PRNGKey(0),
+                             dtype=jnp.bfloat16)
+    p_shard, opt_shard = state_shardings(params_spec, mesh)
+    b, s = shape["batch"], shape["seq"]
+
+    with mesh:
+        if shape["kind"] == "train":
+            mb = microbatches_for(cfg, shape)
+            step = make_train_step(cfg, mesh, microbatches=mb)
+            batch_spec = input_specs(cfg, shape)
+            opt_spec = _spec_tree(adamw_init, params_spec)
+            in_sh = (p_shard, opt_shard,
+                     batch_shardings(batch_spec, mesh, b,
+                                     all_axes=cfg.family == "rwkv6"))
+            out_sh = (p_shard, opt_shard, None)
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = fn.lower(params_spec, opt_spec, batch_spec)
+            extra = {"microbatches": mb}
+        elif shape["kind"] == "prefill":
+            step = make_prefill_step(cfg, mesh)
+            batch_spec = input_specs(cfg, shape)
+            in_sh = (p_shard, batch_shardings(batch_spec, mesh, b,
+                                              all_axes=cfg.family == "rwkv6"))
+            fn = jax.jit(step, in_shardings=in_sh)
+            lowered = fn.lower(params_spec, batch_spec)
+            extra = {}
+        else:  # decode
+            step = make_decode_step(cfg, mesh)
+            cache_spec = _spec_tree(init_cache, cfg, b, s, dtype=jnp.bfloat16)
+            io = input_specs(cfg, shape)
+            c_shard = cache_shardings(cache_spec, mesh, b)
+            tok_shard = batch_shardings(io["token"], mesh, b)
+            in_sh = (p_shard, c_shard, tok_shard, NamedSharding(mesh, P()))
+            out_sh = (None, c_shard)
+            fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = fn.lower(params_spec, cache_spec, io["token"], io["pos"])
+            extra = {}
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    cost = compiled.cost_analysis()
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")
+           if isinstance(cost, dict)})
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo, n_dev)
+
+    # analytic model flops (per the brief: 6ND train / 2ND inference)
+    n_active = cfg.active_param_count()
+    if shape["kind"] == "train":
+        tokens = b * s
+        model_flops = 6.0 * n_active * tokens
+    elif shape["kind"] == "prefill":
+        model_flops = 2.0 * n_active * b * s
+    else:
+        model_flops = 2.0 * n_active * b
+    flops_per_dev = stats.flops / 1.0  # per-device HLO program
+    terms = roofline_terms(
+        flops_per_dev, stats.hbm_bytes, stats.wire_bytes, hw
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+        "n_devices": n_dev,
+        "family": cfg.family,
+        "params": cfg.param_count(),
+        "active_params": n_active,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops_bodies_once": cost.get("flops") if isinstance(cost, dict) else None,
+            "bytes_bodies_once": cost.get("bytes accessed")
+            if isinstance(cost, dict) else None,
+        },
+        "hlo_stats": {
+            "flops_per_device": stats.flops,
+            "hbm_bytes_per_device": stats.hbm_bytes,
+            "wire_bytes_per_device": stats.wire_bytes,
+            "n_while_loops": stats.n_while_loops,
+            "collectives": [
+                {"kind": c.kind, "payload_bytes": c.result_bytes,
+                 "group": c.group_size, "count": c.count}
+                for c in sorted(stats.collectives,
+                                key=lambda c: -c.wire_bytes() * c.count)[:20]
+            ],
+        },
+        "model_flops_total": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / max(stats.flops, 1.0),
+        "roofline": terms,
+        **extra,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = names() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    fan_out = args.all or args.both_meshes or len(archs) > 1 or len(shapes) > 1
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                path = out / f"{arch}__{shape}__{mesh_name}.json"
+                if path.exists() and not args.force:
+                    print(f"[skip-existing] {path.name}")
+                    continue
+                print(f"=== {arch} x {shape} x {mesh_name} ===", flush=True)
+                if fan_out:
+                    # one subprocess per cell: isolates compile memory and
+                    # keeps a single failure from sinking the whole matrix
+                    import subprocess
+                    import sys
+
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape, "--out", str(out),
+                    ]
+                    if multi_pod:
+                        cmd.append("--multi-pod")
+                    if args.force:
+                        cmd.append("--force")
+                    rc = subprocess.run(cmd).returncode
+                    if rc != 0:
+                        failures += 1
+                    continue
+                try:
+                    res = run_cell(arch, shape, multi_pod)
+                except Exception:
+                    failures += 1
+                    res = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "error",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(res["traceback"], flush=True)
+                path.write_text(json.dumps(res, indent=1))
+                if res["status"] == "ok":
+                    r = res["roofline"]
+                    print(
+                        f"  ok: lower={res['lower_s']}s compile={res['compile_s']}s "
+                        f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                        f"collective={r['collective_s']:.4f}s -> {r['dominant']}",
+                        flush=True,
+                    )
+    print(f"done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Step builders shared by train.py, serve.py and dryrun.py.
+
+``make_train_step`` builds the jitted (params, opt, batch) -> (params, opt,
+metrics) function with microbatched gradient accumulation (bounds activation
+memory at train_4k scale) and optional int8 error-feedback gradient
+compression.  ``make_prefill_step`` / ``make_decode_step`` build the serving
+entry points.  All of them thread the mesh Sharder through the model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import decode_step, init_cache, init_params, loss_fn, prefill
+from ..optim.adamw import OptState, adamw_init, adamw_update
+from ..optim.compression import ef_roundtrip
+from ..runtime.sharding import Sharder, param_shardings
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "batch_shardings",
+    "cache_shardings",
+    "state_shardings",
+]
+
+
+def _sharder(cfg, mesh):
+    if mesh is None:
+        return None
+    return Sharder(mesh, dp_only=(cfg.family == "rwkv6"))
+
+
+def make_train_step(
+    cfg,
+    mesh=None,
+    microbatches: int = 1,
+    lr: float = 3e-4,
+    grad_compression: bool = False,
+    dtype=jnp.bfloat16,
+):
+    shd = _sharder(cfg, mesh)
+
+    def train_step(params, opt: OptState, batch, ef_err=None):
+        def mb_loss(p, mb):
+            return loss_fn(p, mb, cfg, shd, dtype=dtype)
+
+        if microbatches > 1:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, aux), grads = jax.value_and_grad(mb_loss, has_aux=True)(
+                    params, mb
+                )
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads
+                )
+                return (gacc, lacc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+        else:
+            (loss, aux), grads = jax.value_and_grad(mb_loss, has_aux=True)(
+                params, batch
+            )
+
+        new_err = ef_err
+        if grad_compression and ef_err is not None:
+            grads, new_err = ef_roundtrip(grads, ef_err)
+        new_params, new_opt, stats = adamw_update(grads, opt, params, lr)
+        metrics = {"loss": loss, **stats}
+        if grad_compression and ef_err is not None:
+            return new_params, new_opt, metrics, new_err
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh=None, dtype=jnp.bfloat16):
+    shd = _sharder(cfg, mesh)
+
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, shd, dtype=dtype)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh=None, dtype=jnp.bfloat16):
+    shd = _sharder(cfg, mesh)
+
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cache, token, pos, cfg, shd, dtype=dtype)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------- #
+# sharding spec builders (used for jit in_shardings/out_shardings)
+# --------------------------------------------------------------------------- #
+
+
+def _batch_axes(mesh, batch_size: int, all_axes: bool = False):
+    names = mesh.axis_names
+    cand = ("pod", "data", "model") if all_axes else ("pod", "data")
+    axes = []
+    total = 1
+    for a in cand:
+        if a in names and batch_size % (total * mesh.shape[a]) == 0:
+            axes.append(a)
+            total *= mesh.shape[a]
+        elif a in names:
+            break
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_shardings(batch_spec, mesh, batch_size: int, all_axes: bool = False):
+    ba = _batch_axes(mesh, batch_size, all_axes)
+
+    def one(leaf):
+        spec = [ba] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, batch_spec)
+
+
+def cache_shardings(cache_spec, mesh, batch_size: int):
+    """KV caches: (L, B, S, KVH, hd) -> batch + kv-heads sharding, falling
+    back to sharding the slots dim when KVH doesn't divide the model axis;
+    recurrent states: shard the state width on 'model'."""
+    from ..runtime.sharding import fit_spec
+
+    ba = _batch_axes(mesh, batch_size)
+    model = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape[model] if model else 1
+
+    def fitted(spec, shape):
+        return NamedSharding(mesh, fit_spec(spec, shape, mesh))
+
+    def one(path, leaf):
+        parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        leaf_name = parts[-1] if parts else ""
+        nd = len(leaf.shape)
+        if leaf_name == "abs_pos":
+            return NamedSharding(mesh, P())
+        if leaf_name in ("k", "v"):
+            # (L, B, slots, KVH, hd): prefer head sharding; else slots
+            if model and leaf.shape[3] % msize == 0:
+                return fitted(P(None, ba, None, model, None), leaf.shape)
+            return fitted(P(None, ba, model, None, None), leaf.shape)
+        if leaf_name == "wkv":  # (L, B, H, hd, hd)
+            return fitted(P(None, ba, model, None, None), leaf.shape)
+        if leaf_name in ("shift_tm", "shift_cm"):
+            return fitted(P(None, ba, None), leaf.shape)
+        if leaf_name == "h":  # (Np, B, Dr)
+            return fitted(P(None, ba, model), leaf.shape)
+        if leaf_name == "conv":  # (Np, B, 3, Dr)
+            return fitted(P(None, ba, None, model), leaf.shape)
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_spec)
+
+
+def state_shardings(params_spec, mesh):
+    """(params, OptState) shardings: optimizer mirrors the params tree."""
+    ps = param_shardings(params_spec, mesh)
+    opt = OptState(
+        step=NamedSharding(mesh, P()),
+        mu=ps,
+        nu=ps,
+    )
+    return ps, opt

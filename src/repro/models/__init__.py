@@ -1,0 +1,5 @@
+"""Architecture zoo: one unified API over dense GQA / MoE / RWKV-6 / RG-LRU."""
+
+from .transformer import decode_step, init_cache, init_params, loss_fn, prefill
+
+__all__ = ["init_params", "loss_fn", "prefill", "decode_step", "init_cache"]

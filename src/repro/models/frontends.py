@@ -1,0 +1,28 @@
+"""STUB modality frontends (per the brief: the transformer backbone is the
+assigned architecture; the modality encoder provides precomputed embeddings).
+
+These stubs generate deterministic pseudo-embeddings with the right shapes —
+enough for smoke tests and training-loop plumbing; ``input_specs()`` in the
+launcher emits matching ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["vit_stub_embeddings", "encodec_stub_embeddings", "N_VIT_PATCHES"]
+
+N_VIT_PATCHES = 256  # InternVL2 448x448 @ pixel-shuffle -> 256 tokens
+
+
+def vit_stub_embeddings(key, batch: int, d_model: int, n_patches: int = N_VIT_PATCHES,
+                        dtype=jnp.bfloat16) -> jax.Array:
+    """Stand-in for InternViT patch embeddings: (B, P, D)."""
+    return jax.random.normal(key, (batch, n_patches, d_model), dtype) * 0.02
+
+
+def encodec_stub_embeddings(key, batch: int, seq: int, d_model: int,
+                            dtype=jnp.bfloat16) -> jax.Array:
+    """Stand-in for summed EnCodec codebook embeddings: (B, S, D)."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02

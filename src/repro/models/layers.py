@@ -1,0 +1,91 @@
+"""Shared layers: RMSNorm, RoPE, gated MLP, embeddings.
+
+All functions are pure; params are plain dict pytrees.  Layer weights carry a
+leading layer-stack dim only where the caller stacks them (lax.scan) — these
+primitives always act on a single layer's slice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rmsnorm",
+    "rope",
+    "mlp",
+    "mlp_init",
+    "embed_init",
+    "softmax_cross_entropy",
+]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+) -> jax.Array:
+    """Rotary embedding, NeoX convention.  x: (..., S, H, hd); positions: (S,)
+    or broadcastable to x's sequence dim."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    # broadcast over the head dim: (..., S, 1, half)
+    ang = ang[..., None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model**-0.5
+    s_ff = d_ff**-0.5
+    return {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w3": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, act: str = "silu", shd=None) -> jax.Array:
+    """Gated MLP (SwiGLU / GeGLU)."""
+    h = x @ params["w1"]
+    g = x @ params["w3"]
+    if shd is not None:
+        h = shd.act(h, "btf")
+        g = shd.act(g, "btf")
+    h = (jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)) * g
+    return h @ params["w2"]
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * d_model**-0.5).astype(dtype)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, z_loss: float = 0.0
+) -> jax.Array:
+    """Mean next-token CE in f32; ``labels < 0`` positions are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,160 @@
+"""Mixture-of-experts FFN: top-k routing with sort-based capacity dispatch.
+
+TPU-native formulation (no ragged work):
+
+1. router logits -> top-k (gates, expert ids) per token;
+2. stable-sort the (token, choice) pairs by expert id, compute each pair's
+   position within its expert group, drop pairs beyond ``capacity``;
+3. gather tokens into a dense (E, C, D) buffer, run all experts as ONE
+   batched matmul (einsum over the E dim — "EP = TP inside the expert":
+   expert weights are stacked on a leading E dim and the ffn dim is
+   tensor-sharded on the ``model`` mesh axis);
+4. scatter-add expert outputs back, weighted by gates.
+
+Dropped tokens (over capacity) pass through the residual only — standard
+capacity-factor semantics.  Shared experts (qwen2-moe) are a dense gated MLP
+applied to every token and added to the routed output.
+
+Aux load-balancing loss: Switch-style E * sum_e f_e * p_e.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    e = cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in, s_ff = d**-0.5, f**-0.5
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(dtype),
+        "we1": (jax.random.normal(k2, (e, d, f)) * s_in).astype(dtype),
+        "we3": (jax.random.normal(k3, (e, d, f)) * s_in).astype(dtype),
+        "we2": (jax.random.normal(k4, (e, f, d)) * s_ff).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        ka, kb, kc, kd = jax.random.split(k5, 4)
+        p["shared_w1"] = (jax.random.normal(ka, (d, fs)) * s_in).astype(dtype)
+        p["shared_w3"] = (jax.random.normal(kb, (d, fs)) * s_in).astype(dtype)
+        p["shared_w2"] = (jax.random.normal(kc, (fs, d)) * fs**-0.5).astype(dtype)
+        p["shared_gate"] = (jax.random.normal(kd, (d, 1)) * s_in).astype(dtype)
+    return p
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, shd=None):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Dispatch is GROUPED BY BATCH ROW: every sort/cumsum/scatter carries the
+    leading B dim, so a batch-sharded input stays batch-sharded end to end.
+    (A flat global argsort over B*S tokens sorts across the sharded batch
+    axis — GSPMD replicates the whole MoE layer; measured cost on
+    mixtral-8x22b train_4k: 197.6 s/step of collective time.)  Capacity is
+    per sequence, the standard grouped-dispatch semantics."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = (x @ params["router"]).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)  # (B, S, k)
+    if cfg.norm_topk_prob:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch): E * sum_e mean(one_hot) * mean(probs)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[experts.reshape(-1)].add(1.0) / (
+        b * s * k
+    )
+    aux = e * jnp.sum(me * ce)
+
+    if s == 1:
+        # decode fast path: run ALL experts densely on the single token and
+        # gate-combine — at B tokens the expert matmuls are tiny, and the
+        # sort/scatter dispatch machinery costs 17x more in collectives
+        # (measured 0.65 s/token vs 0.04 on mixtral decode_32k).  Drop-free.
+        h1 = jnp.einsum("bsd,edf->bsef", x, params["we1"])
+        h3 = jnp.einsum("bsd,edf->bsef", x, params["we3"])
+        if shd is not None:
+            h1 = shd.act(h1, "bsef")
+            h3 = shd.act(h3, "bsef")
+        hh = jax.nn.silu(h1) * h3
+        out_e = jnp.einsum("bsef,efd->bsed", hh, params["we2"])  # (B,1,E,D)
+        onehot = jax.nn.one_hot(experts, e, dtype=gates.dtype)  # (B,1,k,E)
+        weights = jnp.einsum("bske,bsk->bse", onehot, gates)  # (B,1,E)
+        y = jnp.einsum("bsed,bse->bsd", out_e, weights.astype(out_e.dtype))
+        if cfg.n_shared_experts:
+            hs1 = x @ params["shared_w1"]
+            hs3 = x @ params["shared_w3"]
+            hs = (jax.nn.silu(hs1) * hs3) @ params["shared_w2"]
+            sg_ = jax.nn.sigmoid(x @ params["shared_gate"])
+            y = y + hs * sg_.astype(hs.dtype)
+        return y.astype(x.dtype), aux
+
+    capacity = int(max(1, round(s * k / e * cfg.capacity_factor)))
+    capacity = min(capacity, s)
+
+    flat_expert = experts.reshape(b, s * k)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), k)[None], (b, s * k)
+    )
+    flat_gate = gates.reshape(b, s * k)
+    order = jnp.argsort(flat_expert, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_expert, order, axis=1)
+    st = jnp.take_along_axis(flat_token, order, axis=1)
+    sg = jnp.take_along_axis(flat_gate, order, axis=1)
+    # position within the expert group, per batch row
+    group_start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos_in_group = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        group_start, se, axis=1
+    )
+    keep = pos_in_group < capacity
+    slot = jnp.where(keep, se * capacity + pos_in_group, e * capacity)
+
+    # dispatch: (B, E*C+1, D) buffer; padding slot absorbs dropped tokens
+    gathered = jnp.take_along_axis(x, st[..., None], axis=1)  # (B, S*k, D)
+    buf = jnp.zeros((b, e * capacity + 1, d), x.dtype)
+    buf = jax.vmap(lambda bb, sl, g, kp: bb.at[sl].set(
+        jnp.where(kp[:, None], g, 0)
+    ))(buf, slot, gathered, keep)
+    he = buf[:, : e * capacity].reshape(b, e, capacity, d)
+    if shd is not None:
+        he = shd.act(he, "becd")
+
+    # all experts in one batched matmul; ffn dim is TP-sharded
+    h1 = jnp.einsum("becd,edf->becf", he, params["we1"])
+    h3 = jnp.einsum("becd,edf->becf", he, params["we3"])
+    if shd is not None:
+        h1 = shd.act(h1, "becf")
+        h3 = shd.act(h3, "becf")
+    hh = jax.nn.silu(h1) * h3
+    out_e = jnp.einsum("becf,efd->becd", hh, params["we2"])  # (B, E, C, D)
+    if shd is not None:
+        out_e = shd.act(out_e, "becd")
+
+    # combine: gather each kept pair's expert output, weight, scatter-add
+    out_flat = jnp.concatenate(
+        [out_e.reshape(b, e * capacity, d),
+         jnp.zeros((b, 1, d), out_e.dtype)], axis=1,
+    )
+    contrib = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    contrib = contrib * (sg * keep)[..., None].astype(out_e.dtype)
+    y = jnp.zeros((b, s, d), out_e.dtype)
+    y = jax.vmap(lambda yy, tt, cc: yy.at[tt].add(cc))(y, st, contrib)
+
+    if cfg.n_shared_experts:
+        h1 = x @ params["shared_w1"]
+        h3 = x @ params["shared_w3"]
+        if shd is not None:
+            h1 = shd.act(h1, "btf")
+            h3 = shd.act(h3, "btf")
+        hs = (jax.nn.silu(h1) * h3) @ params["shared_w2"]
+        sg_ = jax.nn.sigmoid(x @ params["shared_gate"])
+        y = y + hs * sg_.astype(hs.dtype)
+
+    return y.astype(x.dtype), aux

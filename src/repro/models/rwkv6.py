@@ -1,0 +1,232 @@
+"""RWKV-6 "Finch" block: time mixing with data-dependent decay (the paper's
+headline mechanism) + squared-ReLU channel mixing.  [arXiv:2404.05892]
+
+State per layer: token-shift vectors for both mixers and the (H, hd, hd)
+wkv matrix state.  The time recurrence
+
+    out_t[j] = sum_i r_t[i] (S[i,j] + u[i] k_t[i] v_t[j])
+    S       <- diag(w_t) S + k_t v_t^T
+
+runs as a lax.scan over time; all projections and the data-dependent decay
+LoRAs are precomputed for the whole sequence outside the scan.  Decode is the
+same function at S=1 (no KV cache — constant state; this is why rwkv6 runs
+the long_500k cell).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+__all__ = ["rwkv_init", "rwkv_layer_apply", "rwkv_empty_state"]
+
+_MAA_RANK = 32
+_DECAY_RANK = 64
+
+
+def rwkv_init(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.hd
+    assert h * hd == d, "rwkv requires n_heads * head_dim == d_model"
+    f = cfg.d_ff
+    ks = jax.random.split(key, 12)
+    s = d**-0.5
+    n = lambda k, shape, sc=s: (jax.random.normal(k, shape) * sc).astype(dtype)
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        # time-mix interpolation bases + LoRA
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa_base": jnp.zeros((5, d), dtype),  # w, k, v, r, g
+        "maa_w1": n(ks[0], (d, 5 * _MAA_RANK), 1e-2),
+        "maa_w2": n(ks[1], (5, _MAA_RANK, d), 1e-2),
+        # data-dependent decay
+        "decay_base": jnp.full((d,), -6.0, dtype),
+        "decay_w1": n(ks[2], (d, _DECAY_RANK), 1e-2),
+        "decay_w2": n(ks[3], (_DECAY_RANK, d), 1e-2),
+        "faaaa": jnp.zeros((h, hd), dtype),  # per-head bonus u
+        "rwkv_wr": n(ks[4], (d, d)),
+        "rwkv_wk": n(ks[5], (d, d)),
+        "rwkv_wv": n(ks[6], (d, d)),
+        "rwkv_wg": n(ks[7], (d, d)),
+        "rwkv_wo": n(ks[8], (d, d)),
+        "lnx_scale": jnp.ones((d,), dtype),
+        "lnx_bias": jnp.zeros((d,), dtype),
+        # channel mix
+        "cm_maa_k": jnp.zeros((d,), dtype),
+        "cm_maa_r": jnp.zeros((d,), dtype),
+        "cm_wk": n(ks[9], (d, f)),
+        "cm_wv": n(ks[10], (f, d), f**-0.5),
+        "cm_wr": n(ks[11], (d, d)),
+    }
+    return p
+
+
+def rwkv_empty_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    h, hd = cfg.n_heads, cfg.hd
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),  # state math in f32
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """sx_t = x_{t-1} - x_t with carried previous token."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted - x
+
+
+def _group_norm(x: jax.Array, h: int, scale, bias, eps=64e-5) -> jax.Array:
+    b, s, d = x.shape
+    xg = x.reshape(b, s, h, d // h).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, s, d) * scale + bias).astype(x.dtype)
+
+
+_CHUNK = 16  # intra-chunk parallel span (matches RWKV CUDA kernel practice)
+_EXP_CLAMP = 80.0  # guard clip on centered exponents; see _wkv_chunked note
+
+
+def wkv_sequential(r, k, v, logw, u, S0):
+    """Token-by-token WKV oracle (tests only — O(S) sequential steps)."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out_t = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, out_t
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, logw))
+    S_fin, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2, 3), S_fin
+
+
+def _wkv_chunked(r, k, v, logw, u, S0):
+    """Chunked-parallel WKV recurrence.
+
+    The naive token-by-token scan materializes O(S) state-sized buffers —
+    the dry-run measured 2.5e15 HBM bytes for rwkv6 train_4k.  The chunked
+    form (the standard RWKV kernel decomposition) processes T=16 tokens per
+    step with dense (T,T)/(T,hd) einsums and carries only the chunk-boundary
+    state:
+
+      out_t = (r_t * e^{cum0_t}) S_0                       (cross-chunk)
+            + sum_{tau<t} <r_t e^{cum0_t}, k_tau e^{-cum_tau}> v_tau  (intra)
+            + <r_t * u, k_t> v_t                           (current token)
+      S'    = e^{cum_T} * S_0 + sum_tau (k_tau e^{cum_T - cum_tau}) v_tau^T
+
+    cum is the inclusive cumsum of log-decay (<= 0), cum0 the exclusive one.
+    Numerics: the factored product e^{cum0_t} * e^{-cum_tau} must equal
+    e^{cum0_t - cum_tau} without overflow, so both factors are CENTERED at
+    half the chunk-total decay (c = cum_T / 2): each exponent then stays
+    within +-(T*|logw|_max / 2), which f32 exp covers exactly for
+    |logw| <= 11 at T=16 — far beyond any trained RWKV decay (w = e^{-e^dd}
+    with |logw| = 11 means total forgetting within a single token).  A +-80
+    clip guards pathological inputs (validated against the sequential oracle
+    across decay regimes in tests).
+
+    Shapes: r/k/v/logw (B, S, H, hd) f32; u (H, hd); S0 (B, H, hd, hd).
+    Returns (out (B,S,H,hd), S_final).
+    """
+    b, s, h, hd = r.shape
+    t = min(_CHUNK, s)
+    pad = (-s) % t
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = r.shape[1] // t
+
+    def to_chunks(x):  # (B, S, H, hd) -> (nc, B, H, T, hd)
+        return x.reshape(b, nc, t, h, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32), k=-1)  # strict lower
+
+    def chunk_step(S, xs):
+        rt, kt, vt, lw = xs  # (B, H, T, hd)
+        cum = jnp.cumsum(lw, axis=2)  # inclusive
+        cum0 = cum - lw  # exclusive
+        c = cum[:, :, -1:, :] * 0.5  # center: half the chunk-total decay
+        r_dec = rt * jnp.exp(cum0)  # cross-chunk term needs the raw factor
+        r_ctr = rt * jnp.exp(jnp.clip(cum0 - c, -_EXP_CLAMP, _EXP_CLAMP))
+        k_ctr = kt * jnp.exp(jnp.clip(c - cum, -_EXP_CLAMP, _EXP_CLAMP))
+        # where (not multiply): masked tau>=t entries may hold inf products
+        A = jnp.where(
+            mask.astype(bool),
+            jnp.einsum("bhti,bhsi->bhts", r_ctr, k_ctr),
+            0.0,
+        )
+        diag = jnp.einsum("bhti,bhti->bht", rt * u[None, :, None, :], kt)
+        out = (
+            jnp.einsum("bhts,bhsj->bhtj", A, vt)
+            + diag[..., None] * vt
+            + jnp.einsum("bhti,bhij->bhtj", r_dec, S)
+        )
+        k_end = kt * jnp.exp(cum[:, :, -1:, :] - cum)
+        S = jnp.exp(cum[:, :, -1, :])[..., None] * S + jnp.einsum(
+            "bhti,bhtj->bhij", k_end, vt
+        )
+        return S, out
+
+    S_fin, outs = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    # (nc, B, H, T, hd) -> (B, S, H, hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nc * t, h, hd)[:, :s]
+    return out, S_fin
+
+
+def _time_mix(p, x, state, cfg, shd=None):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    sx = _token_shift(x, state["shift_tm"])
+    xxx = x + sx * p["maa_x"]
+    # 5-way data-dependent interpolation deltas
+    r5 = jnp.tanh(xxx @ p["maa_w1"]).reshape(b, s, 5, _MAA_RANK)
+    deltas = jnp.einsum("bsfr,frd->bsfd", r5, p["maa_w2"])  # (B,S,5,D)
+    mix = p["maa_base"][None, None] + deltas  # (B,S,5,D)
+    xw, xk, xv, xr, xg = [x + sx * mix[:, :, i] for i in range(5)]
+
+    r = (xr @ p["rwkv_wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["rwkv_wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["rwkv_wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["rwkv_wg"])
+    # §Perf R2: rwkv runs pure FSDP+DP — no TP act constraints (see
+    # runtime/sharding.py PARAM_RULES note); batch sharding flows from x.
+    # data-dependent decay w = exp(-exp(dd)) in (0, 1); log w = -exp(dd)
+    dd = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    logw = -jnp.exp(dd.astype(jnp.float32)).reshape(b, s, h, hd)
+    u = p["faaaa"].astype(jnp.float32)
+
+    out, S_fin = _wkv_chunked(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        logw, u, state["wkv"],
+    )
+    out = out.reshape(b, s, d)
+    out = _group_norm(out, h, p["lnx_scale"], p["lnx_bias"])
+    out = (out * g).astype(x.dtype) @ p["rwkv_wo"]
+    new_state = {"shift_tm": x[:, -1, :], "wkv": S_fin}
+    return out, new_state
+
+
+def _channel_mix(p, x, state):
+    sx = _token_shift(x, state["shift_cm"])
+    xk = x + sx * p["cm_maa_k"]
+    xr = x + sx * p["cm_maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return out, {"shift_cm": x[:, -1, :]}
+
+
+def rwkv_layer_apply(p, x, state, cfg, shd=None):
+    """One full RWKV-6 layer.  x: (B,S,D).  Returns (y, new_state)."""
+    h1, st_tm = _time_mix(p, rmsnorm(x, p["ln1"], cfg.norm_eps), state, cfg, shd)
+    x = x + h1
+    h2, st_cm = _channel_mix(p, rmsnorm(x, p["ln2"], cfg.norm_eps), state)
+    x = x + h2
+    return x, {**st_tm, **st_cm}

@@ -1,0 +1,376 @@
+"""Unified LM API over all architecture families.
+
+Every family exposes the same four pure functions:
+
+    init_params(cfg, key, dtype)                  -> params
+    loss_fn(params, batch, cfg, shd, dtype)       -> (loss, metrics)
+    prefill(params, batch, cfg, shd, max_cache)   -> (last_logits, cache)
+    decode_step(params, cache, token, pos, cfg)   -> (logits, cache)
+
+Layers are stacked on a leading L dim and driven by ``lax.scan`` so HLO size
+is depth-independent (64-layer configs must lower fast).  The rglru hybrid
+scans over (rec, rec, attn) *periods* plus an unrolled tail, keeping exactly
+two traced block bodies.
+
+Batches: {"tokens": (B,S)} for LMs; VLM adds {"inputs_embeds": (B,P,D)}
+prefix (frontend stub output); audio uses {"inputs_embeds": (B,S,D),
+"labels": (B,S)} exclusively.  Labels < 0 are masked from the loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_apply, attn_init, make_kv_cache
+from .layers import embed_init, mlp, mlp_init, rmsnorm, softmax_cross_entropy
+from .moe import moe_apply, moe_init
+from .rglru import rglru_apply, rglru_empty_state, rglru_init
+from .rwkv6 import rwkv_empty_state, rwkv_init, rwkv_layer_apply
+
+__all__ = ["init_params", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+MOE_AUX_COEF = 0.01
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _dense_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn_init(k1, cfg, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _rec_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "rec": rglru_init(k1, cfg, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _stack_init(init_one, keys):
+    return jax.vmap(init_one)(keys)
+
+
+def init_params(cfg, key, dtype=jnp.float32) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    vpad = cfg.vocab_padded
+    params: dict[str, Any] = {"embed": embed_init(ke, vpad, cfg.d_model, dtype)}
+    if cfg.family in ("dense", "moe"):
+        keys = jax.random.split(kl, cfg.n_layers)
+        params["layers"] = _stack_init(
+            functools.partial(_dense_block_init, cfg=cfg, dtype=dtype), keys
+        )
+    elif cfg.family == "rwkv6":
+        keys = jax.random.split(kl, cfg.n_layers)
+        params["layers"] = _stack_init(
+            lambda k: rwkv_init(k, cfg, dtype), keys
+        )
+    elif cfg.family == "rglru_hybrid":
+        period = cfg.attn_period or 3
+        n_periods = cfg.n_layers // period
+        tail = cfg.n_layers - n_periods * period
+        kp, kt = jax.random.split(kl)
+
+        def period_init(k):
+            ka, kb, kc = jax.random.split(k, 3)
+            return {
+                "rec_a": _rec_block_init(ka, cfg, dtype),
+                "rec_b": _rec_block_init(kb, cfg, dtype),
+                "attn": _dense_block_init(kc, cfg, dtype),
+            }
+
+        params["periods"] = _stack_init(period_init, jax.random.split(kp, n_periods))
+        if tail:
+            params["tail"] = _stack_init(
+                lambda k: _rec_block_init(k, cfg, dtype), jax.random.split(kt, tail)
+            )
+    else:
+        raise ValueError(cfg.family)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(kh, (cfg.d_model, vpad)) * cfg.d_model**-0.5
+        ).astype(dtype)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+
+
+def _dense_block(p, x, positions, cfg, cache, shd, window, chunk=1024):
+    h, new_cache = attn_apply(
+        p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps), positions, cfg,
+        cache, window, shd, chunk,
+    )
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        h2, aux = moe_apply(p["moe"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg, shd)
+    else:
+        h2 = mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), "silu", shd)
+    # NOTE §Perf Q2 (REFUTED): constraining the residual seq-sharded on the
+    # model axis (Megatron sequence parallelism) was tried here and made the
+    # collective term WORSE (qwen2.5 32.7->39.7s, mixtral 73.7->116.7s):
+    # GSPMD re-gathers the residual at every consumer instead of CSE-ing one
+    # all-gather, so the RS+AG decomposition never pays off. Reverted.
+    return x + h2, new_cache, aux
+
+
+def _rec_block(p, x, state, cfg, shd):
+    h, new_state = rglru_apply(p["rec"], rmsnorm(x, p["ln1"], cfg.norm_eps), state, shd)
+    x = x + h
+    h2 = mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), "gelu", shd)
+    return x + h2, new_state
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# --------------------------------------------------------------------------- #
+# trunk: embeddings -> scanned layers -> final norm (shared by loss/prefill/
+# decode; cache=None means training)
+# --------------------------------------------------------------------------- #
+
+
+def _trunk(params, x, positions, cfg, caches, shd, chunk=1024):
+    """x: (B,S,D) embedded input.  Returns (y, new_caches, aux)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "moe"):
+
+        def body(carry, xs):
+            h, aux = carry
+            p, c = xs
+            h, nc, a = _dense_block(p, h, positions, cfg, c, shd, cfg.window, chunk)
+            return (h, aux + a), nc
+
+        body = _remat(body, cfg)
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, aux0), (params["layers"], caches)
+        )
+        return x, new_caches, aux
+
+    if cfg.family == "rwkv6":
+
+        def body(carry, xs):
+            h, aux = carry
+            p, st = xs
+            h, nst = rwkv_layer_apply(p, h, st, cfg, shd)
+            return (h, aux), nst
+
+        body = _remat(body, cfg)
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, aux0), (params["layers"], caches)
+        )
+        return x, new_caches, aux
+
+    if cfg.family == "rglru_hybrid":
+        period_caches, tail_caches = caches
+
+        def period_body(carry, xs):
+            h, aux = carry
+            p, c = xs
+            h, st_a = _rec_block(p["rec_a"], h, c["rec_a"], cfg, shd)
+            h, st_b = _rec_block(p["rec_b"], h, c["rec_b"], cfg, shd)
+            h, kv, a = _dense_block(
+                p["attn"], h, positions, cfg, c["attn"], shd, cfg.local_window, chunk
+            )
+            return (h, aux + a), {"rec_a": st_a, "rec_b": st_b, "attn": kv}
+
+        period_body = _remat(period_body, cfg)
+        (x, aux), new_period = jax.lax.scan(
+            period_body, (x, aux0), (params["periods"], period_caches)
+        )
+        new_tail = None
+        if "tail" in params:
+
+            def tail_body(carry, xs):
+                h, aux = carry
+                p, st = xs
+                h, nst = _rec_block(p, h, st, cfg, shd)
+                return (h, aux), nst
+
+            tail_body = _remat(tail_body, cfg)
+            (x, aux), new_tail = jax.lax.scan(
+                tail_body, (x, aux), (params["tail"], tail_caches)
+            )
+        return x, (new_period, new_tail), aux
+
+    raise ValueError(cfg.family)
+
+
+def _leading_none_like(params_layers):
+    """A pytree of Nones matching the scanned-xs structure (training mode)."""
+    return jax.tree_util.tree_map(lambda _: None, params_layers)
+
+
+def _train_caches(params, cfg, batch_size, dtype):
+    """'Caches' for training mode: real (zero) recurrent states for the
+    recurrent families (they are part of the math), None for attention KV
+    (None is an empty pytree node, so lax.scan threads it through cleanly)."""
+    if cfg.family in ("dense", "moe"):
+        return None
+    if cfg.family == "rwkv6":
+        L = params["layers"]["ln1"].shape[0]
+        return jax.vmap(lambda _: rwkv_empty_state(cfg, batch_size, dtype))(
+            jnp.arange(L)
+        )
+    if cfg.family == "rglru_hybrid":
+        n_p = params["periods"]["attn"]["ln1"].shape[0]
+        period = jax.vmap(
+            lambda _: {
+                "rec_a": rglru_empty_state(cfg, batch_size, dtype),
+                "rec_b": rglru_empty_state(cfg, batch_size, dtype),
+            }
+        )(jnp.arange(n_p))
+        period = {**period, "attn": None}
+        tail = None
+        if "tail" in params:
+            n_t = params["tail"]["ln1"].shape[0]
+            tail = jax.vmap(lambda _: rglru_empty_state(cfg, batch_size, dtype))(
+                jnp.arange(n_t)
+            )
+        return (period, tail)
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------- #
+# public API
+# --------------------------------------------------------------------------- #
+
+
+def _embed_input(params, batch, cfg, dtype):
+    """Returns (x (B,S,D), labels (B,S))."""
+    if "inputs_embeds" in batch and "tokens" in batch:  # VLM: prefix + text
+        prefix = batch["inputs_embeds"].astype(dtype)
+        tok = batch["tokens"]
+        te = params["embed"][tok].astype(dtype)
+        x = jnp.concatenate([prefix, te], axis=1)
+        pad = jnp.full(prefix.shape[:2], -1, jnp.int32)
+        labels = jnp.concatenate([pad, tok.astype(jnp.int32)], axis=1)
+    elif "inputs_embeds" in batch:  # audio: frames in, codec tokens out
+        x = batch["inputs_embeds"].astype(dtype)
+        labels = batch["labels"].astype(jnp.int32)
+    else:
+        tok = batch["tokens"]
+        x = params["embed"][tok].astype(dtype)
+        labels = tok.astype(jnp.int32)
+    return x, labels
+
+
+def _logits(params, x, cfg):
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head
+
+
+def loss_fn(params, batch, cfg, shd=None, dtype=jnp.bfloat16):
+    x, labels = _embed_input(params, batch, cfg, dtype)
+    if shd is not None:
+        x = shd.act(x, "btd")
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    caches = _train_caches(params, cfg, b, dtype)
+    y, _, aux = _trunk(params, x, positions, cfg, caches, shd)
+    y = rmsnorm(y, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, y, cfg)
+    if shd is not None:
+        logits = shd.act(logits, "btv")
+    loss = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+    total = loss + MOE_AUX_COEF * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode cache sized for ``max_len`` absolute positions."""
+    if cfg.family in ("dense", "moe"):
+        L = cfg.n_layers
+        one = make_kv_cache(cfg, batch, max_len, cfg.window, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape), one
+        )
+    if cfg.family == "rwkv6":
+        return jax.vmap(lambda _: rwkv_empty_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers)
+        )
+    if cfg.family == "rglru_hybrid":
+        period = cfg.attn_period or 3
+        n_p = cfg.n_layers // period
+        tail_n = cfg.n_layers - n_p * period
+        kv = make_kv_cache(cfg, batch, max_len, cfg.local_window, dtype)
+        period_c = {
+            "rec_a": jax.vmap(lambda _: rglru_empty_state(cfg, batch, dtype))(
+                jnp.arange(n_p)
+            ),
+            "rec_b": jax.vmap(lambda _: rglru_empty_state(cfg, batch, dtype))(
+                jnp.arange(n_p)
+            ),
+            "attn": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_p,) + a.shape), kv
+            ),
+        }
+        tail_c = (
+            jax.vmap(lambda _: rglru_empty_state(cfg, batch, dtype))(
+                jnp.arange(tail_n)
+            )
+            if tail_n
+            else None
+        )
+        return (period_c, tail_c)
+    raise ValueError(cfg.family)
+
+
+def prefill(params, batch, cfg, shd=None, max_len: int | None = None,
+            dtype=jnp.bfloat16, chunk: int = 1024):
+    """Process the prompt, return (last-token logits, populated cache)."""
+    x, _ = _embed_input(params, batch, cfg, dtype)
+    if shd is not None:
+        x = shd.act(x, "btd")
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    caches = init_cache(cfg, b, max_len, dtype)
+    y, new_caches, _ = _trunk(params, x, positions, cfg, caches, shd, chunk)
+    y = rmsnorm(y[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, y, cfg)[:, 0]
+    return logits, new_caches
+
+
+def decode_step(params, caches, token, pos, cfg, shd=None, dtype=jnp.bfloat16):
+    """One decode step.  token: (B,) int32; pos: scalar int32 position."""
+    x = params["embed"][token][:, None, :].astype(dtype)
+    pos = jnp.asarray(pos)
+    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
+    y, new_caches, _ = _trunk(params, x, positions, cfg, caches, shd, chunk=2048)
+    y = rmsnorm(y, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, y, cfg)[:, 0]
+    if shd is not None:
+        logits = shd.act(logits, "bv")
+    return logits, new_caches

@@ -1,0 +1,9 @@
+"""Optimizers and distributed-optimization utilities."""
+
+from .adamw import OptState, adamw_init, adamw_update, global_norm
+from .compression import compress, decompress, ef_init, ef_roundtrip
+from .schedules import constant, warmup_cosine
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "global_norm",
+           "compress", "decompress", "ef_init", "ef_roundtrip",
+           "constant", "warmup_cosine"]

@@ -1,0 +1,75 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce at 1000+-node scale).
+
+At scale, the data-parallel gradient all-reduce rides the *inter-pod fabric*
+— the very network the paper studies.  Compressing gradients 4x (f32 -> int8
++ f32 scale per tensor-block) cuts the collective roofline term accordingly;
+error feedback keeps SGD/Adam convergence (Karimireddy et al., 2019).
+
+Pure functions: ``compress``/``decompress`` operate per leaf with a
+block-wise absmax scale; ``ef_roundtrip`` is the piece the train step inserts
+before the all-reduce when ``--grad-compression int8`` is on.  On real
+multi-host deployments the int8 payload is what crosses the wire (psum of
+int32-accumulated int8 blocks); in this single-process container the
+roundtrip is numerically identical, so tests validate the EF contraction
+property directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "ef_roundtrip", "ef_init"]
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def compress(g: jax.Array):
+    """g -> (int8 blocks, f32 per-block scales). Blockwise absmax scaling."""
+    flat, _ = _pad_to_block(g)
+    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_init(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads
+    )
+
+
+def ef_roundtrip(grads, err):
+    """Error-feedback compress->decompress of a gradient pytree.
+
+    Returns (decompressed grads, new error memory).  What would cross the
+    wire is the (int8, scale) pair per leaf."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress(corrected)
+        deq = decompress(q, s, g.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts (see analysis.py)."""
+
+from .analysis import HW, CollectiveOp, parse_collectives, roofline_terms
+from .hlo_stats import HloStats, analyze_hlo
+
+__all__ = ["HW", "CollectiveOp", "parse_collectives", "roofline_terms",
+           "HloStats", "analyze_hlo"]

@@ -1,0 +1,190 @@
+"""Sharding rules: logical tensor dims -> mesh axes, for params and activations.
+
+Mesh axes: ``('pod', 'data', 'model')`` multi-pod, ``('data', 'model')``
+single-pod.  Strategy (MaxText-style TP x FSDP):
+
+* params: tensor-parallel on ``model`` over heads/ffn/vocab; ZeRO-3/FSDP on
+  ``(pod, data)`` over the complementary dim.  Optimizer state inherits.
+* activations: batch on ``(pod, data)``; heads/ffn/vocab on ``model``;
+  sequence unsharded by default, sequence-parallel on ``(pod, data)`` when
+  the per-device batch would be < 1 (long-context decode / huge prefill).
+
+Models never mention mesh axes: they call ``shd.act(x, "btd")`` with a
+one-char-per-dim logical signature:
+
+  b=batch  s/t=sequence  d=d_model  h=heads  k=kv-heads  f=ffn  v=vocab
+  e=expert  c=capacity  .=replicated
+
+A ``Sharder`` with ``mesh=None`` is a no-op (CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Sharder", "param_shardings", "PARAM_RULES"]
+
+Axis = Any  # str | tuple[str, ...] | None
+
+
+@dataclasses.dataclass
+class Sharder:
+    mesh: Mesh | None = None
+    seq_shard: bool = False  # sequence parallelism for batch<dp cases
+    dp_only: bool = False  # no TP anywhere: batch shards over ALL axes
+    # (rwkv-family, §Perf R2: the model axis would otherwise idle)
+
+    def _axes(self) -> dict[str, Axis]:
+        if self.mesh is None:
+            return {}
+        names = self.mesh.axis_names
+        batch = tuple(
+            a for a in (("pod", "data", "model") if self.dp_only
+                        else ("pod", "data")) if a in names
+        ) or None
+        # dp_only: the model axis carries batch, so nothing else may use it
+        model = None if self.dp_only else ("model" if "model" in names else None)
+        seq = batch if self.seq_shard else None
+        return {
+            "b": None if self.seq_shard else batch,
+            "s": seq,
+            "t": seq,
+            "S": model,  # context parallelism: sequence on the model axis
+            "T": model,  # Megatron-style sequence-parallel residual stream
+            "d": None,
+            "h": model,
+            "k": model,
+            "f": model,
+            "v": model,
+            "e": None,
+            "c": None,
+            ".": None,
+        }
+
+    def spec(self, sig: str) -> P:
+        table = self._axes()
+        return P(*[table.get(ch) for ch in sig])
+
+    def act(self, x: jax.Array, sig: str) -> jax.Array:
+        """Sharding constraint from a logical signature.  Axes that do not
+        divide the dim are dropped (GSPMD *can* pad, but uneven shardings
+        trigger pathological resharding copies — better to replicate)."""
+        if self.mesh is None or self.mesh.empty:
+            return x
+        assert len(sig) == x.ndim, (sig, x.shape)
+        spec = fit_spec(self.spec(sig), x.shape, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def divisible(self, n: int, axis: str = "model") -> bool:
+        if self.mesh is None or axis not in self.mesh.axis_names:
+            return False
+        return n % self.mesh.shape[axis] == 0
+
+    def named(self, spec: P) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, spec)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter sharding rules: (path regex, signature builder by ndim)
+# Signatures use the same one-char language; leading "L" (layer-stack dim) and
+# other structural dims map to ".".  First matching rule wins.
+# --------------------------------------------------------------------------- #
+
+# FSDP goes on the complementary big dim ("D" below = d_model rows -> fsdp).
+# "D" char: shard on (pod, data); lowercase letters as in Sharder.
+_FSDP = "D"
+
+PARAM_RULES: list[tuple[str, dict[int, str]]] = [
+    (r"embed", {2: "vD"}),  # (V, D): vocab on model, d on fsdp
+    (r"lm_head", {2: "Dv"}),  # (D, V)
+    # rwkv: FSDP-only, NO tensor parallelism (§Perf R2).  The mixers bounce
+    # between full-width (B,S,D) elementwise work and per-head state math
+    # ~20x per layer; TP-sharding the projections of a 2048-wide model over
+    # a 16-way axis costs a (B,S,D)-sized f32 collective at every boundary
+    # (measured 14.2 s/step).  These rules MUST precede the attention rules
+    # (rwkv_wk would otherwise match r"wk$").
+    (r"rwkv_w[rkvgo]$", {3: ".D."}),  # (L, D, D)
+    (r"cm_wk$", {3: ".D."}),
+    (r"cm_wv$", {3: "..D"}),
+    (r"cm_wr$", {3: ".D."}),
+    (r"(maa_w1|decay_w1)$", {3: ".D."}),
+    (r"(wq|wk|wv|w_qkv)$", {3: ".Dh"}),  # (L, D, H*hd)
+    (r"(wq|wk|wv)_b$", {2: ".h"}),  # bias (L, H*hd)
+    (r"wo$", {3: ".hD"}),  # (L, H*hd, D)
+    (r"(w1|w3)$", {3: ".Df"}),  # (L, D, F)
+    (r"w2$", {3: ".fD"}),  # (L, F, D)
+    (r"(we1|we3)$", {4: "..Df"}),  # (L, E, D, F)
+    (r"we2$", {4: "..fD"}),  # (L, E, F, D)
+    (r"router$", {3: ".D."}),  # (L, D, E)
+    (r"(shared_w1|shared_w3)$", {3: ".Df"}),
+    (r"shared_w2$", {3: ".fD"}),
+    (r"(lru_in|lru_gate_x|lru_gate_a)$", {3: ".Df", 4: "..Df"}),
+    (r"lru_out$", {3: ".fD", 4: "..fD"}),
+]
+
+
+def _spec_from_sig(sig: str, mesh: Mesh) -> P:
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names) or None
+    model = "model" if "model" in names else None
+    table = {
+        "D": batch,  # FSDP dim
+        "v": model,
+        "h": model,
+        "f": model,
+        "k": model,
+        "d": None,
+        ".": None,
+    }
+    return P(*[table.get(ch) for ch in sig])
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Adapt a spec to the array: for tuple axes keep the longest PREFIX
+    whose product divides the dim; drop single axes that do not divide (jit
+    in_shardings demands exact divisibility, and uneven constraint shardings
+    trigger pathological GSPMD resharding)."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        kept = []
+        total = 1
+        for a in axes:
+            if shape[i] % (total * mesh.shape[a]) == 0:
+                kept.append(a)
+                total *= mesh.shape[a]
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    # pad spec to rank
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def param_shardings(params, mesh: Mesh):
+    """Pytree of NamedSharding matching ``params`` via PARAM_RULES."""
+
+    def one(path, leaf):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        for pat, by_ndim in PARAM_RULES:
+            if re.search(pat, name) and leaf.ndim in by_ndim:
+                spec = _spec_from_sig(by_ndim[leaf.ndim], mesh)
+                return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+        # replicate everything else (norms, small vectors, scalars)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, params)

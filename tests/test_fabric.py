@@ -1,0 +1,83 @@
+"""Fabric layer tests: ring embedding, collective cost models, elasticity."""
+
+import numpy as np
+import pytest
+
+from repro.core import fattree, jellyfish
+from repro.fabric import (
+    LinkSpec,
+    all_to_all,
+    bytes_on_wire,
+    embed_ring,
+    make_fabric,
+    ring_all_gather,
+    ring_all_reduce,
+    ring_reduce_scatter,
+    tree_all_reduce,
+)
+
+
+def test_ring_embedding_covers_all_members_once():
+    top = jellyfish(32, 8, 5, seed=0)
+    emb = embed_ring(top)
+    assert sorted(emb.order.tolist()) == list(range(32))
+    assert emb.stretch >= 1.0
+    assert emb.congestion >= 1.0
+    # every hop path is a real path
+    nbrs = top.adjacency_sets()
+    for p in emb.hop_paths:
+        for a, b in zip(p, p[1:]):
+            assert b in nbrs[a]
+
+
+def test_jellyfish_ring_beats_fattree_stretch():
+    """The paper's low-diameter claim shows up as lower ring stretch."""
+    jf = make_fabric("jellyfish", n_pods=64, degree=6, seed=1)
+    ft = make_fabric("fattree", n_pods=64)
+    assert jf.ring().stretch <= ft.ring().stretch + 0.05
+
+
+def test_fabric_expand_and_fail_keep_ring_embeddable():
+    fb = make_fabric("jellyfish", n_pods=32, degree=5, seed=2)
+    grown = fb.expand(8, seed=3)
+    assert grown.topology.n_switches == 40
+    assert grown.ring().congestion < 10
+    degraded = fb.fail(0.15, seed=4)
+    emb = degraded.ring()
+    assert emb.stretch < 3.0  # still a usable fabric
+
+
+def test_collective_cost_models_sane():
+    link = LinkSpec(bandwidth=50e9, latency=1e-6)
+    n, size = 16, 1 << 30
+    ar = ring_all_reduce(size, n, link)
+    rs = ring_reduce_scatter(size, n, link)
+    ag = ring_all_gather(size, n, link)
+    a2a = all_to_all(size, n, link)
+    tr = tree_all_reduce(size, n, link)
+    # AR = RS + AG exactly in the ring decomposition
+    assert ar.wire_bytes_per_device == pytest.approx(
+        rs.wire_bytes_per_device + ag.wire_bytes_per_device
+    )
+    assert ar.time > max(rs.time, ag.time)
+    assert a2a.wire_bytes_per_device < ar.wire_bytes_per_device
+    # tree trades bandwidth for latency
+    assert tr.steps < ar.steps
+    # efficiency scaling
+    half = LinkSpec(bandwidth=50e9, latency=1e-6, efficiency=0.5)
+    assert ring_all_reduce(size, n, half).time > ar.time * 1.9
+
+
+def test_bytes_on_wire_models():
+    assert bytes_on_wire("all-reduce", 100, 2) == pytest.approx(100.0)
+    assert bytes_on_wire("all-gather", 160, 16) == pytest.approx(150.0)
+    assert bytes_on_wire("collective-permute", 7, 99) == 7
+    assert bytes_on_wire("all-reduce", 100, 1) == 0.0
+    with pytest.raises(ValueError):
+        bytes_on_wire("bogus", 1, 2)
+
+
+def test_fabric_a2a_efficiency_in_unit_range():
+    fb = make_fabric("jellyfish", n_pods=24, degree=6, seed=5)
+    e = fb.a2a_efficiency()
+    assert 0 < e <= 1.0

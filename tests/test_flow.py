@@ -1,0 +1,145 @@
+"""Throughput solver validation: routing, LP oracle, MW solver, MPTCP fluid."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_path_system,
+    fattree,
+    jellyfish,
+    k_shortest_paths,
+    lp_concurrent_flow,
+    lp_edge_concurrent_flow,
+    mptcp_throughput,
+    mw_concurrent_flow,
+    random_permutation_traffic,
+    throughput,
+)
+
+
+def _system(top, seed=0, k=8):
+    comm = random_permutation_traffic(top, seed=seed)
+    return build_path_system(top, comm, k=k)
+
+
+# --------------------------------------------------------------------------- #
+# routing
+# --------------------------------------------------------------------------- #
+
+
+def test_ksp_matches_networkx_lengths():
+    import networkx as nx
+
+    top = jellyfish(60, 10, 6, seed=5)
+    g = nx.Graph(top.edges.tolist())
+    pairs = [(0, 30), (1, 59), (10, 20), (5, 6)]
+    ours = k_shortest_paths(top, pairs, k=6)
+    for (s, t), mine in zip(pairs, ours):
+        ref = []
+        for i, p in enumerate(nx.shortest_simple_paths(g, s, t)):
+            if i >= 6:
+                break
+            ref.append(len(p) - 1)
+        assert sorted(len(p) - 1 for p in mine) == sorted(ref)
+        for p in mine:  # simple, adjacent
+            assert len(set(p)) == len(p)
+            assert all(g.has_edge(a, b) for a, b in zip(p, p[1:]))
+
+
+def test_path_system_shape_consistency():
+    top = jellyfish(30, 8, 5, seed=1)
+    ps = _system(top)
+    assert ps.path_edges.max() <= 2 * top.n_edges
+    assert len(ps.demands) == ps.n_commodities
+    assert (ps.path_len >= 1).all()
+    # every path's sentinel padding is consistent with its length
+    for p in range(0, ps.n_paths, 97):
+        row = ps.path_edges[p]
+        assert (row[: ps.path_len[p]] < 2 * top.n_edges).all()
+        assert (row[ps.path_len[p]:] == 2 * top.n_edges).all()
+
+
+# --------------------------------------------------------------------------- #
+# solvers
+# --------------------------------------------------------------------------- #
+
+
+def test_path_lp_matches_edge_lp_exactly():
+    top = jellyfish(16, 6, 4, seed=2)
+    comm = random_permutation_traffic(top, seed=3)
+    ps = build_path_system(top, comm, k=8, max_slack=4)
+    a_path = lp_concurrent_flow(ps).alpha
+    a_edge = lp_edge_concurrent_flow(top, comm)
+    assert a_path == pytest.approx(a_edge, rel=2e-2)
+
+
+def test_mw_close_to_lp():
+    top = jellyfish(60, 10, 6, seed=4)
+    ps = _system(top, seed=5)
+    lp = lp_concurrent_flow(ps)
+    mw = mw_concurrent_flow(ps, iters=600)
+    assert mw.alpha <= lp.alpha * 1.001  # LP is an upper bound
+    assert mw.alpha >= lp.alpha * 0.9
+
+
+def test_fattree_full_bisection_supports_permutation():
+    # a full-bisection fat-tree must support any permutation at full rate
+    # (k=32 paths: the paper's CPLEX reference is unrestricted routing)
+    ft = fattree(6)
+    for seed in range(3):
+        ps = _system(ft, seed=seed, k=32)
+        r = lp_concurrent_flow(ps)
+        assert r.alpha >= 1.0 - 1e-6, f"seed={seed} alpha={r.alpha}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_alpha_monotone_in_capacity(seed):
+    top = jellyfish(24, 8, 5, seed=seed)
+    ps = _system(top, seed=seed)
+    base = lp_concurrent_flow(ps).alpha
+    ps.capacities = ps.capacities * 2.0
+    doubled = lp_concurrent_flow(ps).alpha
+    assert doubled >= base * 1.5  # doubling capacity ~doubles throughput
+
+
+def test_feasibility_of_solutions():
+    top = jellyfish(40, 10, 6, seed=7)
+    ps = _system(top, seed=8)
+    for solver in (lp_concurrent_flow, lambda p: mw_concurrent_flow(p, 300)):
+        res = solver(ps)
+        loads = ps.loads(res.rates)
+        assert (loads <= ps.capacities * (1 + 1e-4)).all()
+
+
+def test_throughput_auto_dispatch():
+    top = jellyfish(20, 8, 5, seed=9)
+    ps = _system(top)
+    r = throughput(ps)
+    assert 0 < r.alpha
+
+
+# --------------------------------------------------------------------------- #
+# MPTCP fluid model
+# --------------------------------------------------------------------------- #
+
+
+def test_mptcp_feasible_and_reasonable():
+    top = jellyfish(50, 10, 6, seed=10)
+    ps = _system(top, seed=11)
+    res = mptcp_throughput(ps, iters=1500)
+    lp = lp_concurrent_flow(ps)
+    # feasible: per-flow normalized throughput within [0, 1]
+    assert (res.per_flow >= -1e-6).all() and (res.per_flow <= 1 + 1e-6).all()
+    # PF mean throughput should be at least the max-min optimum's level
+    assert res.mean_throughput >= min(lp.alpha, 1.0) * 0.85
+    assert res.jain_index > 0.8
+
+
+def test_mptcp_on_uncongested_network_saturates():
+    # big fat network, few flows: every flow should get ~line rate
+    top = jellyfish(40, 13, 12, seed=12)  # 1 server per switch, degree 12
+    ps = _system(top, seed=13)
+    res = mptcp_throughput(ps, iters=1500)
+    assert res.mean_throughput > 0.95

@@ -1,0 +1,109 @@
+"""Roofline machinery tests: HLO parser correctness on synthetic programs and
+a real (tiny-mesh) lowered model; dry-run integration via subprocess."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import HW, roofline_terms
+from repro.roofline.hlo_stats import analyze_hlo
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(197e12, 819e9, 50e9, HW())
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t2 = roofline_terms(1e12, 1e12, 0.0, HW())
+    assert t2["dominant"] == "memory"
+    t3 = roofline_terms(0, 0, 1, HW(), fabric_efficiency=0.5)
+    assert t3["collective_s"] == pytest.approx(1 / 25e9)
+
+
+def test_hlo_parser_counts_loop_trips():
+    """Scanned matmul: flops must scale with trip count (cost_analysis does
+    not do this — the reason hlo_stats exists)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, json, sys
+sys.path.insert(0, %r)
+from repro.roofline.hlo_stats import analyze_hlo
+
+def f(x, w):
+    def body(c, wl):
+        return jnp.dot(c, wl).astype(jnp.bfloat16), None
+    y, _ = jax.lax.scan(body, x, w)
+    return y.astype(jnp.float32).sum()
+
+results = {}
+for L in (2, 8):
+    x = jnp.zeros((128, 256), jnp.bfloat16)
+    w = jnp.zeros((L, 256, 256), jnp.bfloat16)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    st = analyze_hlo(txt, 4)
+    results[L] = st.flops
+print(json.dumps(results))
+""" % SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    expected = {L: L * 2 * 128 * 256 * 256 for L in (2, 8)}
+    for L in ("2", "8"):
+        assert res[L] == pytest.approx(expected[int(L)], rel=0.05), res
+
+
+def test_dryrun_single_cell_subprocess(tmp_path):
+    """Integration: one real dry-run cell (smallest arch) end to end."""
+    out = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "internvl2-1b", "--shape", "decode_32k",
+            "--out", str(tmp_path), "--force",
+        ],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC},
+        timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    blob = json.loads(
+        (tmp_path / "internvl2-1b__decode_32k__pod16x16.json").read_text()
+    )
+    assert blob["status"] == "ok"
+    assert blob["n_devices"] == 256
+    r = blob["roofline"]
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert blob["hlo_stats"]["flops_per_device"] > 0
+    # one decode token on 256 chips of a 0.5B model must be fast
+    assert max(r["compute_s"], r["memory_s"]) < 1.0
+
+
+def test_collective_parser_on_synthetic_hlo():
+    txt = """
+HloModule test
+
+ENTRY %main.1 (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096]{0} all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %cp = f32[1024]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    st = analyze_hlo(txt, 8)
+    kinds = {c.kind: c for c in st.collectives}
+    assert kinds["all-reduce"].group_size == 4
+    assert kinds["all-gather"].group_size == 4
+    assert kinds["all-gather"].result_bytes == 4096 * 4
+    # wire: AR 2*4096*3/4 + AG 16384*3/4 + CP 4096
+    want = 2 * 4096 * 3 / 4 + 16384 * 3 / 4 + 4096
+    assert st.wire_bytes == pytest.approx(want)

@@ -1,0 +1,188 @@
+"""Topology construction invariants: Jellyfish, fat-tree, expansion, baselines.
+
+Includes hypothesis property tests over the construction parameters (the
+system's core invariants: degree bounds, port budgets, connectivity,
+expansion conservation)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    add_switch,
+    apsp_hops,
+    bollobas_diameter_bound,
+    degree_diameter_graph,
+    expand_to,
+    fail_links,
+    fattree,
+    fattree_equipment,
+    jellyfish,
+    localized_jellyfish,
+    path_stats,
+    remove_switch,
+    rewire_free_ports,
+    swdc_ring,
+    swdc_torus2d,
+    swdc_hex3d,
+)
+
+
+# --------------------------------------------------------------------------- #
+# jellyfish construction
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 120),
+    r=st.integers(3, 10),
+    seed=st.integers(0, 2**31),
+)
+def test_jellyfish_construction_invariants(n, r, seed):
+    if r >= n:
+        return
+    k = r + 4
+    top = jellyfish(n, k, r, seed=seed)
+    top.validate()
+    d = top.degrees()
+    assert (d <= r).all()
+    # paper: "only a single unmatched port might remain" in the typical case;
+    # tiny dense corners can strand one extra pair the swaps cannot fix
+    free = int(top.free_ports().sum())
+    assert free <= 2, (n, r, seed, free)
+    if n * r % 2 == 0 and n > 3 * r:
+        assert free == 0, (n, r, seed, free)
+    assert top.n_servers == n * (k - r)
+
+
+def test_jellyfish_connected_and_random_graphs_differ():
+    a = jellyfish(60, 10, 6, seed=0)
+    b = jellyfish(60, 10, 6, seed=1)
+    assert a.is_connected() and b.is_connected()
+    assert not np.array_equal(a.edges, b.edges)
+
+
+def test_jellyfish_diameter_within_bollobas_bound():
+    top = jellyfish(200, 12, 8, seed=3)
+    st_ = path_stats(top)
+    assert st_.diameter <= bollobas_diameter_bound(200, 8)
+
+
+def test_jellyfish_rejects_bad_params():
+    with pytest.raises(ValueError):
+        jellyfish(10, 4, 6)  # r > k
+    with pytest.raises(ValueError):
+        jellyfish(5, 8, 6)  # r >= N
+
+
+# --------------------------------------------------------------------------- #
+# fat-tree
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("k", [4, 6, 8, 12])
+def test_fattree_structure(k):
+    ft = fattree(k)
+    eq = fattree_equipment(k)
+    assert ft.n_switches == eq["switches"]
+    assert ft.n_servers == eq["servers"]
+    assert ft.is_connected()
+    # all switch-switch distances <= 4 in a 3-level fat-tree
+    st_ = path_stats(ft)
+    assert st_.diameter <= 4
+
+
+# --------------------------------------------------------------------------- #
+# expansion (paper §4.2)
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_add_switch_preserves_invariants(seed):
+    top = jellyfish(40, 10, 6, seed=seed)
+    grown = add_switch(top, 10, 6, seed=seed + 1)
+    grown.validate()
+    assert grown.n_switches == 41
+    assert grown.is_connected()
+    # old edges mostly intact: exactly r/2 = 3 splices remove 3 edges
+    assert grown.n_edges == top.n_edges + 3
+
+
+def test_expand_to_many_and_remove():
+    top = jellyfish(20, 12, 4, seed=0)
+    grown = expand_to(top, 60, 12, 4, seed=1)
+    assert grown.n_switches == 60
+    assert grown.is_connected()
+    grown.validate()
+    shrunk = remove_switch(grown, 5, seed=2)
+    assert shrunk.n_switches == 59
+    shrunk.validate()
+
+
+def test_rewire_free_ports_reduces_free():
+    top = jellyfish(30, 10, 6, seed=0)
+    failed = fail_links(top, 0.2, seed=1)
+    rewired = rewire_free_ports(failed, seed=2)
+    assert rewired.free_ports().sum() <= failed.free_ports().sum()
+    rewired.validate()
+
+
+# --------------------------------------------------------------------------- #
+# baselines
+# --------------------------------------------------------------------------- #
+
+
+def test_swdc_variants_structure():
+    ring = swdc_ring(48, 8, seed=0)
+    torus = swdc_torus2d(7, 8, seed=0)
+    hx = swdc_hex3d(4, 3, 8, seed=0)
+    for t in (ring, torus, hx):
+        t.validate()
+        assert t.is_connected()
+        assert (t.degrees() <= 6).all()
+
+
+def test_degree_diameter_catalog():
+    for name in ("petersen", "heawood", "hoffman-singleton"):
+        top = degree_diameter_graph(name, k_ports=12)
+        top.validate()
+        st_ = path_stats(top)
+        assert st_.diameter == top.meta["diameter"]
+
+
+def test_localized_jellyfish_split():
+    top = localized_jellyfish(4, 12, 10, 8, local_links=5, seed=0)
+    top.validate()
+    pod = top.meta["pod_of"]
+    local = sum(1 for u, v in top.edges if pod[u] == pod[v])
+    # local links should be about 5/8 of all links
+    assert 0.5 < local / top.n_edges < 0.75
+    assert top.is_connected()
+
+
+def test_apsp_matches_networkx():
+    import networkx as nx
+
+    top = jellyfish(50, 8, 5, seed=11)
+    d = apsp_hops(top.adjacency())
+    g = nx.Graph(top.edges.tolist())
+    nxd = dict(nx.all_pairs_shortest_path_length(g))
+    for u in range(50):
+        for v in range(50):
+            assert d[u, v] == nxd[u][v]
+
+
+def test_heterogeneous_expansion_mixed_port_counts():
+    """Paper §4.2: newer, larger switches join the same random graph."""
+    top = jellyfish(40, 24, 16, seed=0)
+    for i in range(6):
+        top = add_switch(top, 48, 32, seed=50 + i)
+    top.validate()
+    assert top.n_switches == 46
+    assert top.is_connected()
+    assert set(top.net_degree.tolist()) == {16, 32}
+    # the big switches actually reached their degree (within odd-port slack)
+    d = top.degrees()
+    assert (d[-6:] >= 31).all()

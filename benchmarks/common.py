@@ -26,12 +26,19 @@ def save(name: str, payload: dict) -> None:
     (ART / f"{name}.json").write_text(json.dumps(payload, indent=1))
 
 
-def alpha_of(top, seed=0, k=8, slack=3, method="auto", iters=500) -> float:
-    """Max concurrent flow alpha for a random permutation matrix."""
+def alpha_of(top, seed=0, k=8, slack=3, method="auto", iters=500,
+             mw_backend="auto") -> float:
+    """Max concurrent flow alpha for a random permutation matrix.
+
+    ``build_path_system`` keeps a per-topology routing cache, so sweeping
+    traffic seeds over one topology (``supports_full_capacity``) pays for the
+    APSP/walk-count precompute once.  ``mw_backend`` selects the MW solver's
+    congestion backend (see repro.kernels.ops.preferred_congestion_backend).
+    """
     comm = random_permutation_traffic(top, seed=seed)
     ps = build_path_system(top, comm, k=k, max_slack=slack)
     if method == "mw" or (method == "auto" and ps.n_paths > 30000):
-        return mw_concurrent_flow(ps, iters=iters).alpha
+        return mw_concurrent_flow(ps, iters=iters, backend=mw_backend).alpha
     return lp_concurrent_flow(ps).alpha
 
 

@@ -25,9 +25,10 @@ from repro.core import (
     random_permutation_traffic,
     spectral_lambda2,
 )
+from repro.core.routing import _k_shortest_paths_dfs, clear_routing_cache
 from repro.kernels import ops
 
-from .common import Timer, csv_row, save
+from .common import FULL, Timer, csv_row, save
 
 
 def _time(fn, warmup=1, iters=3):
@@ -47,8 +48,12 @@ def run() -> list[str]:
     top = jellyfish(512, 24, 18, seed=0)
     adj = top.adjacency()
     t_blas = _time(lambda: apsp_hops(adj))
-    d_mp = jax.jit(lambda a: ops.apsp_minplus(a, backend="ref"))
-    t_minplus = _time(lambda: jax.block_until_ready(d_mp(jnp.asarray(adj))))
+    adj_j = jnp.asarray(adj)
+    # eager (per-squaring jit) so the convergence early-stop can run: 3
+    # squarings at diameter ~4 instead of the 9 the worst-case bound implies
+    t_minplus = _time(
+        lambda: jax.block_until_ready(ops.apsp_minplus(adj_j, backend="ref"))
+    )
     out.append(csv_row("apsp_blas_bfs_512", t_blas * 1e6, f"{t_blas*1e3:.1f}ms"))
     out.append(csv_row("apsp_minplus_512", t_minplus * 1e6, f"{t_minplus*1e3:.1f}ms"))
     results["apsp"] = {"blas_bfs_s": t_blas, "minplus_s": t_minplus}
@@ -64,24 +69,109 @@ def run() -> list[str]:
     out.append(csv_row("lambda2_block_512", t_ops * 1e6, f"{t_ops*1e3:.1f}ms"))
     results["lambda2"] = {"numpy_s": t_np, "block_s": t_ops}
 
-    # flow solvers on a mid-size instance
+    # routing engine: batched enumerator vs the legacy per-pair Python DFS
+    # (same process, same precomputed APSP, so machine load cancels out).
+    # RRG(1024, 24, 18) is the acceptance instance; cold includes the
+    # per-topology cache build (APSP + walk counts), warm is the steady state
+    # of sweeping traffic matrices over one topology (paper §4 methodology).
+    rt = jellyfish(1024, 24, 18, seed=0)
+    rcomm = random_permutation_traffic(rt, seed=1)
+    rpairs = list(zip(rcomm.src.tolist(), rcomm.dst.tolist()))
+    rdist = apsp_hops(rt.adjacency())
+    clear_routing_cache()
+    with Timer() as t_cold:
+        build_path_system(rt, rcomm, k=8)
+    with Timer() as t_warm:
+        rps = build_path_system(rt, random_permutation_traffic(rt, seed=2), k=8)
+    with Timer() as t_dfs:
+        _k_shortest_paths_dfs(rt, rpairs, k=8, dist=rdist)
+    out.append(csv_row("route_dfs_1024", t_dfs.dt * 1e6, f"{t_dfs.dt:.1f}s"))
+    out.append(
+        csv_row(
+            "route_batched_cold_1024", t_cold.dt * 1e6,
+            f"{t_dfs.dt / t_cold.dt:.1f}x_vs_dfs",
+        )
+    )
+    out.append(
+        csv_row(
+            "route_batched_warm_1024", t_warm.dt * 1e6,
+            f"{t_dfs.dt / t_warm.dt:.1f}x_vs_dfs P={rps.n_paths}",
+        )
+    )
+    results["routing_1024"] = {
+        "dfs_s": t_dfs.dt,
+        "batched_cold_s": t_cold.dt,
+        "batched_warm_s": t_warm.dt,
+        "speedup_cold": t_dfs.dt / t_cold.dt,
+        "speedup_warm": t_dfs.dt / t_warm.dt,
+        "n_paths": int(rps.n_paths),
+    }
+
+    if FULL:
+        # scale envelope: RRG(2048, 48, 36) — an order of magnitude beyond
+        # what the DFS path sustained (minutes); batched + MW end to end.
+        big = jellyfish(2048, 48, 36, seed=0)
+        bcomm = random_permutation_traffic(big, seed=1)
+        with Timer() as t_big:
+            bps = build_path_system(big, bcomm, k=8)
+        with Timer() as t_bmw:
+            bmw = mw_concurrent_flow(bps, iters=200)
+        out.append(
+            csv_row(
+                "route_batched_2048x48", t_big.dt * 1e6,
+                f"P={bps.n_paths} mw_alpha={bmw.alpha:.3f} "
+                f"mw_s={t_bmw.dt:.1f}",
+            )
+        )
+        results["routing_2048x48"] = {
+            "build_s": t_big.dt, "mw_s": t_bmw.dt,
+            "n_paths": int(bps.n_paths), "alpha": float(bmw.alpha),
+        }
+
+    # flow solvers: MW / MPTCP timed at RRG(512); the exact-LP oracle (and the
+    # MW-vs-LP quality ratio) at RRG(128) — single-core HiGHS needs minutes
+    # beyond ~10k path variables, which is exactly why MW is the scale solver.
     comm = random_permutation_traffic(top, seed=1)
     with Timer() as t_ps:
         ps = build_path_system(top, comm, k=8)
     t_mw = _time(lambda: mw_concurrent_flow(ps, iters=400), warmup=1, iters=2)
-    with Timer() as t_lp:
-        lp = lp_concurrent_flow(ps)
     mw = mw_concurrent_flow(ps, iters=400)
     t_mp = _time(lambda: mptcp_throughput(ps, iters=1500), warmup=1, iters=2)
     out.append(csv_row("path_system_build_512", t_ps.dt * 1e6, f"P={ps.n_paths}"))
-    out.append(csv_row("mw_flow_400it", t_mw * 1e6, f"alpha={mw.alpha:.3f}"))
-    out.append(csv_row("lp_flow_exact", t_lp.dt * 1e6, f"alpha={lp.alpha:.3f}"))
-    out.append(csv_row("mw_vs_lp_quality", 0.0, f"{mw.alpha/lp.alpha:.4f}"))
-    out.append(csv_row("mptcp_1500it", t_mp * 1e6, ""))
+    out.append(csv_row("mw_flow_400it_512", t_mw * 1e6, f"alpha={mw.alpha:.3f}"))
+    out.append(csv_row("mptcp_1500it_512", t_mp * 1e6, ""))
+
+    lt = jellyfish(128, 24, 18, seed=0)
+    lps = build_path_system(lt, random_permutation_traffic(lt, seed=1), k=8)
+    with Timer() as t_lp:
+        lp = lp_concurrent_flow(lps)
+    lmw = mw_concurrent_flow(lps, iters=400)
+    out.append(csv_row("lp_flow_exact_128", t_lp.dt * 1e6, f"alpha={lp.alpha:.3f}"))
+    out.append(csv_row("mw_vs_lp_quality_128", 0.0, f"{lmw.alpha/lp.alpha:.4f}"))
     results["flow"] = {
-        "build_s": t_ps.dt, "mw_s": t_mw, "lp_s": t_lp.dt,
-        "mw_quality": mw.alpha / lp.alpha, "mptcp_s": t_mp,
-        "n_paths": int(ps.n_paths),
+        "build_512_s": t_ps.dt, "mw_512_s": t_mw, "mptcp_512_s": t_mp,
+        "n_paths_512": int(ps.n_paths),
+        "lp_128_s": t_lp.dt, "mw_quality_128": lmw.alpha / lp.alpha,
+    }
+
+    # MW congestion backends: scatter/segment-sum vs dense-incidence kernel
+    # path (ops.congestion -> ref on CPU, fused Pallas kernel on TPU)
+    small = jellyfish(60, 10, 6, seed=4)
+    sps = build_path_system(
+        small, random_permutation_traffic(small, seed=5), k=8
+    )
+    t_sc = _time(lambda: mw_concurrent_flow(sps, iters=200, backend="scatter"),
+                 warmup=1, iters=2)
+    t_dn = _time(lambda: mw_concurrent_flow(sps, iters=200, backend="dense"),
+                 warmup=1, iters=2)
+    a_sc = mw_concurrent_flow(sps, iters=200, backend="scatter").alpha
+    a_dn = mw_concurrent_flow(sps, iters=200, backend="dense").alpha
+    out.append(csv_row("mw_scatter_200it", t_sc * 1e6, f"alpha={a_sc:.4f}"))
+    out.append(csv_row("mw_dense_200it", t_dn * 1e6, f"alpha={a_dn:.4f}"))
+    results["mw_backends"] = {
+        "scatter_s": t_sc, "dense_s": t_dn,
+        "alpha_scatter": a_sc, "alpha_dense": a_dn,
+        "alpha_absdiff": abs(a_sc - a_dn),
     }
 
     # pallas interpret-mode validation timing (tiny, correctness path)

@@ -9,3 +9,10 @@ ROOT = pathlib.Path(__file__).resolve().parent
 for p in (str(ROOT / "src"), str(ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def pytest_configure(config):
+    # "slow" gates the CI fast lane (-m "not slow"); full tier-1 runs all.
+    config.addinivalue_line(
+        "markers", "slow: multi-second test excluded from the CI fast lane"
+    )

@@ -26,11 +26,38 @@ import shutil
 
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: zstd when the wheel is available, zlib fallback otherwise
+    import zstandard
+except ModuleNotFoundError:  # pragma: no cover - depends on container image
+    zstandard = None
+import zlib
 
 import jax
 
 __all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+# blob name encodes the codec so readers never guess
+_BLOB_ZSTD = "arrays.msgpack.zst"
+_BLOB_ZLIB = "arrays.msgpack.zlib"
+
+
+def _compress(raw: bytes) -> tuple[str, bytes]:
+    if zstandard is not None:
+        return _BLOB_ZSTD, zstandard.ZstdCompressor(level=3).compress(raw)
+    return _BLOB_ZLIB, zlib.compress(raw, level=3)
+
+
+def _decompress(directory: pathlib.Path) -> bytes:
+    zst, zlb = directory / _BLOB_ZSTD, directory / _BLOB_ZLIB
+    if zst.exists():
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                f"checkpoint {zst} is zstd-compressed but the 'zstandard' "
+                "module is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(zst.read_bytes())
+    return zlib.decompress(zlb.read_bytes())
 
 
 def _flatten(tree):
@@ -59,9 +86,8 @@ def save_pytree(tree, directory: str | pathlib.Path, extra: dict | None = None):
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     packer = {k: v.tobytes() for k, v in arrays.items()}
     raw = msgpack.packb(packer, use_bin_type=True)
-    (tmp / "arrays.msgpack.zst").write_bytes(
-        zstandard.ZstdCompressor(level=3).compress(raw)
-    )
+    blob_name, blob = _compress(raw)
+    (tmp / blob_name).write_bytes(blob)
     if directory.exists():
         shutil.rmtree(directory)
     tmp.rename(directory)  # atomic publish
@@ -73,10 +99,7 @@ def load_pytree(directory: str | pathlib.Path, target=None, shardings=None):
     ``shardings`` given (pytree of NamedSharding), device_put accordingly."""
     directory = pathlib.Path(directory)
     manifest = json.loads((directory / "manifest.json").read_text())
-    raw = zstandard.ZstdDecompressor().decompress(
-        (directory / "arrays.msgpack.zst").read_bytes()
-    )
-    blobs = msgpack.unpackb(raw, raw=False)
+    blobs = msgpack.unpackb(_decompress(directory), raw=False)
     arrays = {}
     for name, meta in manifest["arrays"].items():
         arrays[name] = np.frombuffer(

@@ -9,8 +9,30 @@ multicommodity LP.  We provide two solvers over an explicit path system:
   (validated in tests on small instances against an edge-based LP).
 * ``mw_concurrent_flow``   — jitted JAX mirror-descent / multiplicative-weights
   iteration minimizing the smoothed max edge load.  This is the TPU-shaped
-  solver: its inner loop is exactly the gather/segment-sum ("congestion")
-  primitive implemented by ``repro.kernels.congestion``.
+  solver: its inner loop is exactly the fused gather/segment-sum
+  ("congestion") primitive implemented by ``repro.kernels.congestion``.
+
+Congestion backends
+-------------------
+Each MW iteration needs the two incidence products ``loads = B^T r`` and
+``costs = B w`` (B the {0,1} path x directed-slot incidence).  Two
+interchangeable inner-loop backends compute them:
+
+* ``scatter`` — segment-sum / gather on the padded ``path_edges`` table; no
+  materialized B.  The CPU production path, and the only option when B is too
+  large to materialize.
+* ``dense``   — materializes B once and calls ``repro.kernels.ops.congestion``
+  (the fused Pallas kernel on TPU, reading each B tile from HBM once per
+  iteration; the jnp reference elsewhere).  ``backend="pallas"`` forces the
+  kernel (interpret mode off-TPU) for validation.
+
+``backend="auto"`` picks via ``repro.kernels.ops.preferred_congestion_backend``
+(problem size + platform).  To let the fused kernel compute both products in
+a single pass over B, the iteration uses softmax weights derived from the
+*previous* iterate's edge loads (a one-step price lag — the standard Jacobi
+pipelining); both backends implement the identical lagged recurrence, so they
+agree on alpha to float tolerance, and the per-iterate alpha bookkeeping uses
+exact current loads either way.
 
 Maximum concurrent flow: maximize alpha s.t. each commodity i routes
 ``alpha * d_i`` and edge loads respect capacities.  For the capacity question
@@ -21,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import numpy as np
 
@@ -28,6 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from .routing import PathSystem
+from ..kernels import ops
 
 __all__ = [
     "FlowResult",
@@ -52,66 +76,121 @@ class FlowResult:
 
 
 # --------------------------------------------------------------------------- #
+# congestion-primitive backends (shared with core.mptcp)
+# --------------------------------------------------------------------------- #
+
+
+def dense_incidence(path_edges: jnp.ndarray, n_slots: int) -> jnp.ndarray:
+    """(P, S) {0,1} incidence from the padded path-edge table (sentinel = S)."""
+    P, L = path_edges.shape
+    b = jnp.zeros((P, n_slots + 1), jnp.float32)
+    b = b.at[jnp.arange(P)[:, None], path_edges].add(1.0)
+    return b[:, :n_slots]
+
+
+def make_congestion_fn(path_edges: jnp.ndarray, n_slots: int, backend: str):
+    """Fused (loads, costs) = (B^T r, B w) closure for the chosen backend.
+
+    Trace-time helper for the jitted solvers: ``scatter`` uses segment sums
+    over the padded path-edge table, ``dense``/``pallas`` materialize B once
+    (hoisted out of the scan by jit) and go through ``ops.congestion``.
+    """
+    P, L = path_edges.shape
+    if backend == "scatter":
+
+        def fused(rates, prices):
+            flat = jnp.repeat(rates, L)
+            loads = (
+                jnp.zeros((n_slots + 1,), jnp.float32)
+                .at[path_edges.reshape(-1)]
+                .add(flat)[:n_slots]
+            )
+            pr_pad = jnp.concatenate([prices, jnp.zeros((1,), jnp.float32)])
+            costs = jnp.sum(pr_pad[path_edges], axis=1)
+            return loads, costs
+
+        return fused
+
+    if backend not in ("dense", "pallas"):
+        raise ValueError(f"unknown congestion backend: {backend!r}")
+    b = dense_incidence(path_edges, n_slots)
+    kernel_backend = "pallas" if backend == "pallas" else "auto"
+
+    def fused(rates, prices):
+        return ops.congestion(b, rates, prices, backend=kernel_backend)
+
+    return fused
+
+
+def _resolve_backend(backend: str, n_paths: int, n_slots: int) -> str:
+    if backend == "auto":
+        return ops.preferred_congestion_backend(n_paths, n_slots)
+    return backend
+
+
+# --------------------------------------------------------------------------- #
 # JAX multiplicative-weights solver
 # --------------------------------------------------------------------------- #
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
+@functools.partial(jax.jit, static_argnames=("iters", "backend"))
 def _mw_solve(
-    path_edges: jnp.ndarray,  # (P, L) int32 padded with E
+    path_edges: jnp.ndarray,  # (P, L) int32 padded with S (= n_slots)
     owner: jnp.ndarray,  # (P,) int32
     demands: jnp.ndarray,  # (K,) f32
-    inv_cap: jnp.ndarray,  # (E,) f32  (1 / capacity)
+    inv_cap: jnp.ndarray,  # (S,) f32  (1 / capacity per directed slot)
     n_comm: int,
     iters: int,
+    backend: str = "scatter",
 ):
     P, L = path_edges.shape
-    E = inv_cap.shape[0]
+    S = inv_cap.shape[0]
     K = demands.shape[0]
-
-    inv_cap_pad = jnp.concatenate([inv_cap, jnp.zeros((1,), jnp.float32)])
-    # per-path gather of 1/cap for each hop (sentinel hop contributes 0)
-    hop_inv_cap = inv_cap_pad[path_edges]  # (P, L)
+    fused = make_congestion_fn(path_edges, S, backend)
 
     def seg_norm(x):
         s = jnp.zeros((K,), jnp.float32).at[owner].add(x)
         return x / s[owner]
 
-    def loads_of(rates):
-        flat = jnp.repeat(rates, L) * hop_inv_cap.reshape(-1)
-        rel = jnp.zeros((E + 1,), jnp.float32).at[path_edges.reshape(-1)].add(flat)
-        return rel[:E]  # relative load per edge
-
     x0 = seg_norm(jnp.ones((P,), jnp.float32))
 
     def body(carry, t):
-        x, best_alpha, best_x = carry
+        x, rel_prev, best_alpha, best_x = carry
+        # softmax weights from the PREVIOUS iterate's loads (one-step lag) so
+        # the fused kernel computes this iterate's loads and the gradient's
+        # path costs in a single pass over B.  rel_prev = 0 at t = 0 gives
+        # uniform weights.
+        mx_prev = jnp.max(rel_prev)
+        # GEOMETRIC temperature anneal (0.2 -> 0.005 of max load) +
+        # 1/sqrt(t) step decay; the lagged recurrence measures ~0.98 of the
+        # LP optimum at 400 iterations on RRG(128,24,18)
+        # (benchmarks/kernels_bench.py mw_vs_lp_quality_128)
+        frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters)
+        tau = jnp.maximum(mx_prev, 1e-12) * frac
+        w = jax.nn.softmax(rel_prev / tau)
         rates = x * demands[owner]
-        rel = loads_of(rates)
+        loads, costs = fused(rates, w * inv_cap)
+        rel = loads * inv_cap  # relative load per directed slot (exact)
         mx = jnp.max(rel)
         alpha = 1.0 / jnp.maximum(mx, 1e-12)
         better = alpha > best_alpha
         best_alpha = jnp.where(better, alpha, best_alpha)
         best_x = jnp.where(better, x, best_x)
-        # smoothed-max gradient; GEOMETRIC temperature anneal (0.2 -> 0.005 of
-        # max load) + 1/sqrt(t) step decay: measured 0.950 -> 0.985 of the LP
-        # optimum at 400 iterations on RRG(512,24,18) (§Perf S1)
-        frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters)
-        tau = jnp.maximum(mx, 1e-12) * frac
-        w = jax.nn.softmax(rel / tau)
-        w_pad = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
-        g = jnp.sum(w_pad[path_edges] * hop_inv_cap, axis=1) * demands[owner]
+        g = costs * demands[owner]
         g = g / jnp.maximum(jnp.max(g), 1e-12)
         eta = 2.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
         x = seg_norm(x * jnp.exp(-eta * g))
-        return (x, best_alpha, best_x), None
+        return (x, rel, best_alpha, best_x), None
 
-    (x, best_alpha, best_x), _ = jax.lax.scan(
-        body, (x0, jnp.float32(0.0), x0), jnp.arange(iters)
+    (x, rel, best_alpha, best_x), _ = jax.lax.scan(
+        body,
+        (x0, jnp.zeros((S,), jnp.float32), jnp.float32(0.0), x0),
+        jnp.arange(iters),
     )
-    # one final evaluation of the last iterate
+    # one final exact evaluation of the last iterate
     rates = x * demands[owner]
-    mx = jnp.max(loads_of(rates))
+    loads, _ = fused(rates, jnp.zeros((S,), jnp.float32))
+    mx = jnp.max(loads * inv_cap)
     alpha = 1.0 / jnp.maximum(mx, 1e-12)
     better = alpha > best_alpha
     best_alpha = jnp.where(better, alpha, best_alpha)
@@ -120,9 +199,18 @@ def _mw_solve(
     return best_alpha, best_rates, 1.0 / best_alpha
 
 
-def mw_concurrent_flow(ps: PathSystem, iters: int = 400) -> FlowResult:
+def mw_concurrent_flow(
+    ps: PathSystem, iters: int = 400, backend: str = "auto"
+) -> FlowResult:
+    """MW/mirror-descent max concurrent flow.
+
+    ``backend``: ``"auto"`` (platform/size dispatch), ``"scatter"``,
+    ``"dense"`` (incidence matmul via ops.congestion), or ``"pallas"``
+    (force the fused kernel, interpret mode off-TPU).
+    """
     if ps.n_paths == 0:
         return FlowResult(0.0, np.zeros(0), np.inf, "mw", 0)
+    backend = _resolve_backend(backend, ps.n_paths, ps.n_slots)
     alpha, rates, max_load = _mw_solve(
         jnp.asarray(ps.path_edges),
         jnp.asarray(ps.path_owner),
@@ -130,9 +218,10 @@ def mw_concurrent_flow(ps: PathSystem, iters: int = 400) -> FlowResult:
         jnp.asarray(1.0 / ps.capacities, dtype=jnp.float32),
         ps.n_commodities,
         iters,
+        backend,
     )
     return FlowResult(
-        float(alpha), np.asarray(rates), float(max_load), "mw", iters
+        float(alpha), np.asarray(rates), float(max_load), f"mw-{backend}", iters
     )
 
 
@@ -244,11 +333,22 @@ def lp_edge_concurrent_flow(top, comm, alpha_cap: float = 8.0) -> float:
     return float(res.x[-1])
 
 
+# LP failures worth falling back from: our own "LP failed" RuntimeError,
+# scipy/HiGHS input rejections (ValueError), and a missing scipy entirely.
+_LP_FALLBACK_ERRORS = (RuntimeError, ValueError, ImportError)
+
+
 def throughput(ps: PathSystem, method: str = "auto", iters: int = 400) -> FlowResult:
     """Concurrent-flow throughput with automatic solver selection."""
     if method == "lp" or (method == "auto" and ps.n_paths <= 20000):
         try:
             return lp_concurrent_flow(ps)
-        except Exception:  # pragma: no cover - LP solver hiccup
+        except _LP_FALLBACK_ERRORS as exc:
+            warnings.warn(
+                f"LP solver failed ({type(exc).__name__}: {exc}); "
+                "falling back to the MW solver",
+                RuntimeWarning,
+                stacklevel=2,
+            )
             return mw_concurrent_flow(ps, iters=iters)
     return mw_concurrent_flow(ps, iters=iters)

@@ -18,6 +18,14 @@ by projected gradient ascent with a quadratic penalty on link overload
 against the LP/MW solvers: PF throughput <= max-concurrent-flow alpha and
 >= alpha for symmetric demands, and the paper's 86-90%-of-optimal headline is
 reproduced by benchmarks/fig8_mptcp.py.
+
+The price iteration's two incidence products per step — path prices
+``q = B p`` and link loads ``ld = B^T r`` — go through the same congestion
+backend machinery as ``core.flow`` (``make_congestion_fn``): scatter/gather
+on CPU, the fused Pallas kernel over a materialized incidence on TPU.  To
+let the fused kernel compute both in one pass over B, the price update uses
+the previous step's rates (one-step Jacobi lag); the equilibrium is
+unchanged and the final exact feasibility rescale is lag-free.
 """
 
 from __future__ import annotations
@@ -30,6 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .flow import _resolve_backend, make_congestion_fn
 from .routing import PathSystem
 
 __all__ = ["MptcpResult", "mptcp_throughput"]
@@ -49,8 +58,11 @@ class MptcpResult:
         )
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
-def _pf_solve(path_edges, owner, demands, caps, n_comm: int, iters: int):
+@functools.partial(jax.jit, static_argnames=("iters", "backend"))
+def _pf_solve(
+    path_edges, owner, demands, caps, n_comm: int, iters: int,
+    backend: str = "scatter",
+):
     """Kelly-style dual (link-price) iteration for coupled multipath PF.
 
     Prices ``p_e`` ascend on overload; each commodity responds with total rate
@@ -59,48 +71,53 @@ def _pf_solve(path_edges, owner, demands, caps, n_comm: int, iters: int):
     minimum-price paths, total rate follows 1/price).  Rates are split over
     near-minimum-price paths by a softmin.  Polyak-averaged rates over the
     tail half give the reported allocation, then an exact feasibility rescale.
+
+    Each step makes ONE fused congestion call: (ld_prev, q) =
+    (B^T r_prev, B p).  The price ascent therefore uses the previous step's
+    loads (Jacobi lag) — same fixed point, one pass over B per step.
     """
     P, L = path_edges.shape
     E = caps.shape[0]
     K = demands.shape[0]
-
-    def loads_of(r):
-        flat = jnp.repeat(r, L)
-        ld = jnp.zeros((E + 1,), jnp.float32).at[path_edges.reshape(-1)].add(flat)
-        return ld[:E]  # sentinel column dropped
+    fused = make_congestion_fn(path_edges, E, backend)
 
     seg_min_init = jnp.full((K,), jnp.inf, jnp.float32)
     beta0 = 0.2
     temp = 0.05  # softmin temperature over path prices
 
-    def body(carry, t):
-        p, r_avg, n_avg = carry
-        p_pad = jnp.concatenate([p, jnp.zeros((1,), jnp.float32)])
-        q = jnp.sum(p_pad[path_edges], axis=1)  # (P,) path price
+    def response(q):
+        """Commodity rate response to path prices q."""
         qmin = seg_min_init.at[owner].min(q)
         # commodity rate response (w_i = d_i: weighted PF, NIC-capped)
         x = jnp.minimum(demands, demands / jnp.maximum(qmin, 1e-3))
         # softmin split over that commodity's paths
         z = jnp.exp(-(q - qmin[owner]) / temp)
         zsum = jnp.zeros((K,), jnp.float32).at[owner].add(z)
-        r = x[owner] * z / jnp.maximum(zsum[owner], 1e-9)
-        ld = loads_of(r)
+        return x[owner] * z / jnp.maximum(zsum[owner], 1e-9)
+
+    def body(carry, t):
+        p, r_prev, r_avg, n_avg = carry
+        ld_prev, q = fused(r_prev, p)
+        r = response(q)
         beta = beta0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
-        p = jnp.maximum(p + beta * (ld - caps) / jnp.maximum(caps, 1e-9), 0.0)
+        p = jnp.maximum(p + beta * (ld_prev - caps) / jnp.maximum(caps, 1e-9), 0.0)
         # tail averaging
         take = t >= (iters // 2)
         r_avg = jnp.where(take, r_avg + r, r_avg)
         n_avg = jnp.where(take, n_avg + 1.0, n_avg)
-        return (p, r_avg, n_avg), None
+        return (p, r, r_avg, n_avg), None
 
     p0 = jnp.full((E,), 0.1, jnp.float32)
-    (p, r_avg, n_avg), _ = jax.lax.scan(
-        body, (p0, jnp.zeros((P,), jnp.float32), jnp.float32(0.0)),
+    # seed the lagged rates with the response to the initial prices
+    _, q0 = fused(jnp.zeros((P,), jnp.float32), p0)
+    r0 = response(q0)
+    (p, r_last, r_avg, n_avg), _ = jax.lax.scan(
+        body, (p0, r0, jnp.zeros((P,), jnp.float32), jnp.float32(0.0)),
         jnp.arange(iters), length=iters,
     )
     r = r_avg / jnp.maximum(n_avg, 1.0)
     # exact feasibility: globally rescale by worst overload, then re-cap NICs
-    ld = loads_of(r)
+    ld, _ = fused(r, jnp.zeros((E,), jnp.float32))
     scale = jnp.maximum(jnp.max(ld / jnp.maximum(caps, 1e-9)), 1.0)
     r = r / scale
     x = jnp.zeros((K,), jnp.float32).at[owner].add(r)
@@ -108,9 +125,12 @@ def _pf_solve(path_edges, owner, demands, caps, n_comm: int, iters: int):
     return x, r
 
 
-def mptcp_throughput(ps: PathSystem, iters: int = 2000) -> MptcpResult:
+def mptcp_throughput(
+    ps: PathSystem, iters: int = 2000, backend: str = "auto"
+) -> MptcpResult:
     if ps.n_paths == 0:
         return MptcpResult(np.zeros(0), 0.0, 1.0, 0)
+    backend = _resolve_backend(backend, ps.n_paths, ps.n_slots)
     x, _ = _pf_solve(
         jnp.asarray(ps.path_edges),
         jnp.asarray(ps.path_owner),
@@ -118,6 +138,7 @@ def mptcp_throughput(ps: PathSystem, iters: int = 2000) -> MptcpResult:
         jnp.asarray(ps.capacities, dtype=jnp.float32),
         ps.n_commodities,
         iters,
+        backend,
     )
     x = np.asarray(x)
     norm = x / np.maximum(ps.demands, 1e-9)

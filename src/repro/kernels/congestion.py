@@ -59,9 +59,15 @@ def congestion_pallas(
     prices: jax.Array,  # (E,)
     bp: int = 128,
     be: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (loads (E,), costs (P,)) = (B^T r, B w), fused single pass."""
+    """Returns (loads (E,), costs (P,)) = (B^T r, B w), fused single pass.
+
+    ``interpret=None`` (default) auto-detects: compiled on TPU, interpreter
+    elsewhere.  Pass an explicit bool to override.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     P, E = incidence.shape
     pp, ep = (-P) % bp, (-E) % be
     b_p = jnp.pad(incidence.astype(jnp.float32), ((0, pp), (0, ep)))

@@ -59,9 +59,16 @@ def minplus_pallas(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """C[i, j] = min_k A[i, k] + B[k, j], with +inf-padded 128-aligned tiles."""
+    """C[i, j] = min_k A[i, k] + B[k, j], with +inf-padded 128-aligned tiles.
+
+    ``interpret=None`` (default) auto-detects: compiled on TPU, interpreter
+    elsewhere.  Pass an explicit bool to override (e.g. interpret=True on TPU
+    to debug the kernel body).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

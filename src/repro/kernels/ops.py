@@ -5,9 +5,25 @@ TPU is the *target*; this container is CPU-only.  Policy:
 * ``backend="auto"`` (default): run the Pallas kernel on TPU, the pure-jnp
   reference (XLA-compiled, fast) on CPU.  Production code calls these and is
   correct everywhere.
-* ``backend="pallas"``: force the kernel in interpret mode — the validation
-  path used by tests (executes the kernel body on CPU).
+* ``backend="pallas"``: force the kernel — on TPU compiled, elsewhere
+  interpret mode — the validation path used by tests (executes the kernel
+  body on CPU).
 * ``backend="ref"``: force the oracle.
+
+Flow-solver backend selection
+-----------------------------
+The MW / MPTCP inner loops (``core.flow``, ``core.mptcp``) need the fused
+incidence products ``(B^T r, B w)`` every iteration.  Whether to materialize
+the dense (P, 2E) incidence B and call the fused ``congestion`` kernel, or to
+stay with gather/segment-sum over the padded path table, is a platform *and*
+size question, answered here by ``preferred_congestion_backend``:
+
+* On TPU the dense kernel wins whenever B fits comfortably in HBM (scatter
+  adds are serialized and MXU-hostile), so: ``dense`` iff
+  ``P * 2E * 4 bytes <= dense_budget_bytes``.
+* On CPU the scatter path wins at any interesting size (B is ~99% zeros and
+  XLA's scatter-add is cache-friendly), so: ``scatter`` unless the instance
+  is tiny.
 
 ``apsp_minplus`` is the TPU-shaped APSP (min-plus squaring); CPU production
 code keeps the BLAS frontier-BFS in ``core.metrics``.
@@ -29,6 +45,7 @@ __all__ = [
     "congestion",
     "apsp_minplus",
     "power_iteration_lambda2",
+    "preferred_congestion_backend",
 ]
 
 
@@ -36,39 +53,92 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Dense incidence budget for the fused congestion kernel on TPU: B tiles are
+# streamed from HBM, so "fits" means HBM headroom, not VMEM.  4 GiB leaves
+# room for the f32 B plus solver state on a 16+ GiB part.
+DENSE_INCIDENCE_BUDGET_BYTES = 4 << 30
+# On CPU a dense B only beats scatter for toy instances (fits hot in cache).
+_CPU_DENSE_LIMIT_BYTES = 8 << 20
+
+
+def preferred_congestion_backend(
+    n_paths: int,
+    n_slots: int,
+    dense_budget_bytes: int | None = None,
+) -> str:
+    """Pick the flow-solver congestion backend ('dense' or 'scatter') by size.
+
+    ``n_paths`` x ``n_slots`` is the incidence shape (P, 2E); see module
+    docstring for the policy.
+    """
+    bytes_needed = 4 * int(n_paths) * int(n_slots)
+    if _on_tpu():
+        budget = (
+            DENSE_INCIDENCE_BUDGET_BYTES
+            if dense_budget_bytes is None
+            else dense_budget_bytes
+        )
+        return "dense" if bytes_needed <= budget else "scatter"
+    limit = (
+        _CPU_DENSE_LIMIT_BYTES if dense_budget_bytes is None else dense_budget_bytes
+    )
+    return "dense" if bytes_needed <= limit else "scatter"
+
+
 def minplus(a, b, backend: str = "auto", **blocks):
     if backend == "ref" or (backend == "auto" and not _on_tpu()):
         return ref.minplus_ref(a, b)
-    interpret = not _on_tpu()
-    return minplus_pallas(a, b, interpret=interpret, **blocks)
+    return minplus_pallas(a, b, **blocks)
 
 
 def matmul(a, b, backend: str = "auto", **blocks):
     if backend == "ref" or (backend == "auto" and not _on_tpu()):
         return ref.matmul_ref(a, b)
-    interpret = not _on_tpu()
-    return matmul_pallas(a, b, interpret=interpret, **blocks)
+    return matmul_pallas(a, b, **blocks)
 
 
 def congestion(incidence, rates, prices, backend: str = "auto", **blocks):
     if backend == "ref" or (backend == "auto" and not _on_tpu()):
         return ref.congestion_ref(incidence, rates, prices)
-    interpret = not _on_tpu()
-    return congestion_pallas(incidence, rates, prices, interpret=interpret, **blocks)
+    return congestion_pallas(incidence, rates, prices, **blocks)
 
 
-def apsp_minplus(adj, backend: str = "auto") -> jax.Array:
-    """All-pairs hop distances by min-plus squaring of the adjacency."""
+def apsp_minplus(
+    adj, backend: str = "auto", diameter_hint: int | None = None
+) -> jax.Array:
+    """All-pairs hop distances by min-plus squaring of the adjacency.
+
+    ``D^(2t)`` converges once ``2^t >= diameter``, so with ``diameter_hint``
+    only ``ceil(log2(hint))`` squarings run; without it, squaring stops as
+    soon as a pass is a fixed point (low-diameter random graphs converge in
+    2-3 squarings — the n-1 worst-case bound would do 9+ at N=512 for
+    nothing).  The convergence check syncs host-side; pass a hint inside
+    fully-jitted pipelines.
+    """
     n = adj.shape[0]
     d = jnp.where(jnp.asarray(adj) > 0, 1.0, jnp.inf)
     d = jnp.where(jnp.eye(n, dtype=bool), 0.0, d)
-    steps = 0
+    # the convergence check needs concrete values; under an outer jit fall
+    # back to the static worst-case squaring count (pass diameter_hint to
+    # bound it explicitly inside fully-jitted pipelines)
+    traced = isinstance(d, jax.core.Tracer)
+    if diameter_hint is not None or traced:
+        cover = diameter_hint if diameter_hint is not None else max(n - 1, 1)
+        steps = 0
+        m = 1
+        while m < max(cover, 1):
+            m *= 2
+            steps += 1
+        for _ in range(steps):
+            d = minplus(d, d, backend=backend)
+        return d
     m = 1
-    while m < max(n - 1, 1):  # enough squarings to cover any diameter
+    while m < max(n - 1, 1):
+        new = minplus(d, d, backend=backend)
         m *= 2
-        steps += 1
-    for _ in range(steps):
-        d = minplus(d, d, backend=backend)
+        if bool(jnp.all(new == d)):  # fixed point: all distances found
+            return new
+        d = new
     return d
 
 

@@ -39,9 +39,15 @@ def matmul_pallas(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """C = A @ B with zero-padded 128-aligned VMEM tiles, f32 accumulation."""
+    """C = A @ B with zero-padded 128-aligned VMEM tiles, f32 accumulation.
+
+    ``interpret=None`` (default) auto-detects: compiled on TPU, interpreter
+    elsewhere.  Pass an explicit bool to override.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -1,0 +1,92 @@
+"""Property-test shim: real hypothesis when installed, deterministic fallback.
+
+Tier-1 must collect and run on a bare container (no ``hypothesis`` wheel
+baked in).  Test modules import ``given``/``settings``/``st`` from here; when
+hypothesis is available they get the real engine (declared as an optional
+dependency in requirements.txt), otherwise a minimal deterministic stand-in
+that draws a fixed, seeded set of examples per test — boundary values first,
+then pseudo-random draws.  Only the strategy surface this suite uses
+(``st.integers``, ``st.booleans``) is implemented; extend as tests grow.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        """Deterministic drop-in for a hypothesis strategy."""
+
+        def __init__(self, boundary, sample):
+            self._boundary = list(boundary)  # tried first, in order
+            self._sample = sample  # rng -> value
+
+        def example_at(self, i: int, rng: "np.random.Generator"):
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                boundary=[min_value, max_value],
+                sample=lambda rng: int(rng.integers(min_value, max_value + 1)),
+            )
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(
+                boundary=[False, True],
+                sample=lambda rng: bool(rng.integers(0, 2)),
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Decorator recording max_examples on the (given-wrapped) test."""
+
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Decorator running the test over a deterministic example sweep."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_prop_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # one seeded stream per test: same examples on every run
+                # (crc32, not hash(): str hash is randomized per process)
+                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = {
+                        name: strat.example_at(i, rng)
+                        for name, strat in strategies.items()
+                    }
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the strategy params from pytest's fixture resolution
+            params = [
+                p
+                for p in inspect.signature(fn).parameters.values()
+                if p.name not in strategies
+            ]
+            runner.__signature__ = inspect.Signature(params)
+            return runner
+
+        return deco

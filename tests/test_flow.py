@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property import given, settings, st  # hypothesis or deterministic shim
 
 from repro.core import (
     build_path_system,

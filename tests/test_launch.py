@@ -3,7 +3,7 @@ properties, mesh planning, end-to-end driver smoke."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property import given, settings, st  # hypothesis or deterministic shim
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +16,7 @@ from repro.optim.adamw import adamw_init
 from repro.optim.compression import ef_init
 
 
+@pytest.mark.slow
 def test_train_step_with_int8_compression_converges():
     cfg = get("internvl2-1b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -38,6 +39,7 @@ def test_train_step_with_int8_compression_converges():
     assert losses[-1] < losses[0]  # memorizing one batch must reduce loss
 
 
+@pytest.mark.slow
 def test_train_step_microbatch_equivalence():
     """Gradient accumulation must match the single-batch gradient step."""
     cfg = get("musicgen-medium").reduced()

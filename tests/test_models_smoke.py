@@ -39,6 +39,7 @@ def test_all_ten_archs_registered():
     assert len(ALL_ARCHS) == 10
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get(arch).reduced()
@@ -81,6 +82,7 @@ def test_smoke_prefill_decode_shapes(arch):
     assert bool(jnp.all(jnp.isfinite(logits2)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "arch", ["qwen2.5-32b", "mixtral-8x22b", "rwkv6-1.6b", "recurrentgemma-2b",
              "qwen2-moe-a2.7b"]

@@ -63,6 +63,7 @@ print(json.dumps(results))
         assert res[L] == pytest.approx(expected[int(L)], rel=0.05), res
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_subprocess(tmp_path):
     """Integration: one real dry-run cell (smallest arch) end to end."""
     out = subprocess.run(

@@ -6,7 +6,7 @@ expansion conservation)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _property import given, settings, st  # hypothesis or deterministic shim
 
 from repro.core import (
     add_switch,

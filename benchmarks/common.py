@@ -19,6 +19,9 @@ from repro.core import (
 
 ART = pathlib.Path(os.environ.get("REPRO_BENCH_OUT", "artifacts/bench"))
 FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))  # bigger sizes
+# CI bench-smoke lane: tiny configs (2 sweep sizes, 1 run) so delta-vs-rebuild
+# speedup and alpha parity are tracked per PR in minutes, not hours
+SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
 
 
 def save(name: str, payload: dict) -> None:

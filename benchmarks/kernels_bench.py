@@ -16,19 +16,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
+    add_switch,
     apsp_hops,
     build_path_system,
+    extend_server_permutation,
     jellyfish,
     lp_concurrent_flow,
     mw_concurrent_flow,
     mptcp_throughput,
+    permutation_commodities,
     random_permutation_traffic,
+    random_server_permutation,
     spectral_lambda2,
+    update_path_system,
 )
 from repro.core.routing import _k_shortest_paths_dfs, clear_routing_cache
 from repro.kernels import ops
 
-from .common import FULL, Timer, csv_row, save
+from .common import FULL, SMOKE, Timer, csv_row, save
 
 
 def _time(fn, warmup=1, iters=3):
@@ -40,9 +45,81 @@ def _time(fn, warmup=1, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
+def _delta_routing_chain(n0: int, k_ports: int, r_net: int, steps: int,
+                         seed: int = 0, k: int = 8) -> dict:
+    """Per-mutation delta updates vs from-scratch rebuilds on one chain.
+
+    Grows RRG(n0, k_ports, r_net) by ``steps`` single-switch additions,
+    maintaining permutation traffic incrementally; every step times
+    ``update_path_system`` against a cold ``build_path_system`` on the same
+    (topology, traffic) and cross-checks MW alpha parity at the end.
+    """
+    rng = np.random.default_rng(seed)
+    top = jellyfish(n0, k_ports, r_net, seed=1)
+    perm = random_server_permutation(top.n_servers, seed=seed)
+    comm = permutation_commodities(top, perm)
+    ps = build_path_system(top, comm, k=k)
+    us, fs = [], []
+    ps_full = ps
+    for _ in range(steps):
+        tn = add_switch(top, k_ports, r_net, seed=rng)
+        perm = extend_server_permutation(perm, tn.n_servers, seed=rng)
+        comm = permutation_commodities(tn, perm)
+        with Timer() as t1:
+            ps = update_path_system(ps, top, tn, comm)
+        us.append(t1.dt)
+        with Timer() as t2:
+            ps_full = build_path_system(tn, comm, k=k, cache=False)
+        fs.append(t2.dt)
+        top = tn
+    a = mw_concurrent_flow(ps, iters=150).alpha
+    b = mw_concurrent_flow(ps_full, iters=150).alpha
+    us, fs = np.asarray(us), np.asarray(fs)
+    return {
+        "delta_s": float(us.sum()),
+        "rebuild_s": float(fs.sum()),
+        "speedup": float(fs.sum() / max(us.sum(), 1e-12)),
+        # back-to-back per-step ratio median: robust to machine noise
+        "median_step_speedup": float(np.median(fs / np.maximum(us, 1e-12))),
+        "alpha_absdiff": abs(a - b),
+        "reused_fraction": float((np.asarray(ps.row_map) >= 0).mean()),
+    }
+
+
 def run() -> list[str]:
     out = []
     results = {}
+
+    # delta routing: incremental path-system updates vs full rebuilds.
+    # Two regimes: the fig5 acceptance sweep scale (RRG(20,12,8) grown), and
+    # the steady-state scale envelope (RRG(256,24,18)+) where the per-splice
+    # churn is a small fraction of the commodity set and deltas win >= 5x.
+    small = _delta_routing_chain(20, 12, 8, steps=24 if SMOKE else 140)
+    out.append(
+        csv_row(
+            "delta_routing_20grown", small["delta_s"] * 1e6,
+            f"{small['speedup']:.1f}x_vs_rebuild "
+            f"med_step={small['median_step_speedup']:.1f}x "
+            f"alpha_diff={small['alpha_absdiff']:.1e} "
+            f"reused={small['reused_fraction']:.2f}",
+        )
+    )
+    results["delta_routing_small"] = small
+    if not SMOKE:
+        big = _delta_routing_chain(256, 24, 18, steps=12)
+        out.append(
+            csv_row(
+                "delta_routing_256", big["delta_s"] * 1e6,
+                f"{big['speedup']:.1f}x_vs_rebuild "
+                f"med_step={big['median_step_speedup']:.1f}x "
+                f"alpha_diff={big['alpha_absdiff']:.1e} "
+                f"reused={big['reused_fraction']:.2f}",
+            )
+        )
+        results["delta_routing_256"] = big
+    if SMOKE:
+        save("kernels_bench", results)
+        return out
 
     # APSP: BLAS frontier-BFS vs min-plus powering (jnp ref backend)
     top = jellyfish(512, 24, 18, seed=0)

@@ -3,8 +3,15 @@ feature.  A training cluster's inter-pod fabric is a Jellyfish; we grow it,
 fail parts of it, re-embed the collective ring each time, and re-plan the
 device mesh — checkpoint-restore included.
 
+Routing rides the delta engine: each mutation carries its edge delta, so the
+fabric's path system is *updated* (``routing.update_path_system`` via
+``FabricModel.path_system``) rather than rebuilt, and the MW flow solver
+warm-starts from the pre-mutation rates.
+
     PYTHONPATH=src python examples/expand_cluster.py
 """
+
+import time
 
 import numpy as np
 
@@ -12,6 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core import (
+    extend_server_permutation,
+    mw_concurrent_flow,
+    permutation_commodities,
+    random_server_permutation,
+)
 from repro.fabric import make_fabric
 from repro.runtime.elastic import plan_mesh, replan
 
@@ -23,26 +36,63 @@ def main():
     print("initial fabric: ", fabric.describe())
     print("initial mesh:   ", mesh.describe())
 
+    # route cross-pod permutation traffic; this path system is the state the
+    # delta engine carries through every mutation below
+    perm = random_server_permutation(fabric.topology.n_servers, seed=0)
+    comm = permutation_commodities(fabric.topology, perm)
+    t0 = time.perf_counter()
+    ps = fabric.path_system(comm)
+    flow = mw_concurrent_flow(ps, iters=200)
+    print(f"initial routing:  P={ps.n_paths} paths, alpha={flow.alpha:.3f} "
+          f"({(time.perf_counter() - t0) * 1e3:.0f}ms, full build)")
+
     # pretend-train, checkpoint
     ckpt = CheckpointManager("/tmp/repro_elastic_ckpt", keep=2)
     params = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
     ckpt.save(100, params, extra={"mesh": mesh.describe()}, blocking=True)
 
-    # --- expansion: +16 pods arrive (random edge swaps, paper §4.2) ---
-    fabric = fabric.expand(16, seed=1)
+    # --- expansion: +16 pods arrive in 4-pod tranches (paper §4.2) ---
+    # Routing between tranches keeps each topology delta small enough for
+    # update_path_system to splice instead of rebuild; the new pods join the
+    # traffic permutation in place, and MW warm-starts from the old rates.
+    print("\n+16 pods (4-pod tranches):")
+    for tranche in range(4):
+        fabric = fabric.expand(4, seed=10 + tranche)
+        perm = extend_server_permutation(perm, fabric.topology.n_servers,
+                                         seed=10 + tranche)
+        comm = permutation_commodities(fabric.topology, perm)
+        t0 = time.perf_counter()
+        ps = fabric.path_system(comm)
+        dt_route = (time.perf_counter() - t0) * 1e3
+        flow = mw_concurrent_flow(ps, iters=200, warm=flow)
+        spliced = float((ps.row_map >= 0).mean()) if ps.row_map is not None else 0.0
+        print(f"  +4 pods -> {fabric.topology.n_switches}: "
+              f"alpha={flow.alpha:.3f}, routing {dt_route:.0f}ms, "
+              f"{spliced:.0%} of paths spliced from the old system")
     new_mesh, report = replan(mesh, 80 * 256)
-    print("\n+16 pods:")
     print("  fabric:       ", fabric.describe())
     print("  mesh replan:  ", report)
     restored, extra = ckpt.restore_latest(target=params)
     print(f"  checkpoint from step {extra['step']} restores onto the new mesh "
           f"(shape {restored['w'].shape})")
 
-    # --- failure: a pod dies + 5% of inter-pod links fail (paper §4.3) ---
-    fabric = fabric.remove(pod=3, seed=2).fail(0.05, seed=3)
+    # --- failure: 5% of inter-pod links fail (paper §4.3) ---
+    fabric = fabric.fail(0.05, seed=3)
+    t0 = time.perf_counter()
+    ps = fabric.path_system(comm)  # same tenants, degraded fabric: pure delta
+    dt_route = (time.perf_counter() - t0) * 1e3
+    flow = mw_concurrent_flow(ps, iters=200, warm=flow)
+    spliced = float((ps.row_map >= 0).mean()) if ps.row_map is not None else 0.0
+    print("\n5% links failed:")
+    print("  fabric:       ", fabric.describe())
+    print(f"  routing delta:  alpha={flow.alpha:.3f} "
+          f"(routing {dt_route:.0f}ms, {spliced:.0%} of paths spliced)")
+
+    # --- and a pod dies outright ---
+    fabric = fabric.remove(pod=3, seed=2)
     emb = fabric.ring()
     new_mesh2, report2 = replan(new_mesh, 79 * 256)
-    print("\npod 3 lost + 5% links failed:")
+    print("\npod 3 lost:")
     print("  fabric:       ", fabric.describe())
     print("  re-embedded ring:", emb.summary())
     print("  mesh replan:  ", report2)

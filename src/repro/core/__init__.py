@@ -28,13 +28,31 @@ from .legup import CostModel, ExpansionStage, jellyfish_arc, legup_arc
 from .metrics import apsp_hops, bollobas_diameter_bound, path_stats, PathStats
 from .mptcp import MptcpResult, mptcp_throughput
 from .placement import CablePlan, localized_jellyfish, plan_cables
-from .routing import PathSystem, build_path_system, k_shortest_paths
+from .routing import (
+    PathSystem,
+    build_path_system,
+    k_shortest_paths,
+    update_path_system,
+)
 from .swdc import swdc_hex3d, swdc_ring, swdc_torus2d
-from .topology import Topology, adj_to_edges, edges_to_adj
-from .traffic import Commodities, all_to_all_traffic, random_permutation_traffic
+from .topology import (
+    Topology,
+    adj_to_edges,
+    edge_delta,
+    edge_fingerprint,
+    edges_to_adj,
+)
+from .traffic import (
+    Commodities,
+    all_to_all_traffic,
+    extend_server_permutation,
+    permutation_commodities,
+    random_permutation_traffic,
+    random_server_permutation,
+)
 
 __all__ = [
-    "Topology", "adj_to_edges", "edges_to_adj",
+    "Topology", "adj_to_edges", "edges_to_adj", "edge_delta", "edge_fingerprint",
     "jellyfish", "jellyfish_heterogeneous", "rrg",
     "add_switch", "remove_switch", "rewire_free_ports", "expand_to",
     "fattree", "fattree_equipment",
@@ -46,7 +64,9 @@ __all__ = [
     "bollobas_bound", "spectral_lambda2", "spectral_lower_bound",
     "kernighan_lin_bisection", "normalized_bisection",
     "Commodities", "random_permutation_traffic", "all_to_all_traffic",
-    "PathSystem", "build_path_system", "k_shortest_paths",
+    "random_server_permutation", "extend_server_permutation",
+    "permutation_commodities",
+    "PathSystem", "build_path_system", "k_shortest_paths", "update_path_system",
     "FlowResult", "mw_concurrent_flow", "lp_concurrent_flow",
     "lp_edge_concurrent_flow", "throughput",
     "MptcpResult", "mptcp_throughput",

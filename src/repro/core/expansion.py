@@ -4,20 +4,46 @@ To add a new switch ``u`` with ``r_u`` network ports: repeat ``r_u // 2``
 times — pick a random existing link (v, w) such that u is adjacent to neither
 endpoint, remove it, and add (u, v) and (u, w).  This consumes two of ``u``'s
 ports per swap and leaves the rest of the graph a (slightly smaller) random
-graph.  Heterogeneous port counts come for free.  An odd leftover port stays
-free (the paper permits matching it to another free port if one exists).
+graph.  Heterogeneous port counts come for free.  Leftover free ports are
+re-matched by ``rewire_free_ports``: candidate pairs are exhausted
+deterministically, and a switch stuck with >= 2 free ports whose candidates
+are all adjacent is incorporated by an edge-swap splice (remove a random
+existing link, connect both of its ends to the stuck switch) — the paper's
+full §4.2 rule.
 
 The same procedure also implements *elastic shrink* (node removal): removing a
 random switch from an RRG leaves a random graph with a few free ports, which
 ``rewire_free_ports`` re-matches (paper §4.3: "a random graph topology with a
 few failures is just another random graph topology of slightly smaller size").
+
+Delta contract
+--------------
+Every mutation producer in this module (and in ``core.failures``) stamps an
+edge-level delta on the result's ``meta`` so consumers — most importantly
+``core.routing.update_path_system`` — can repair cached routing state instead
+of rebuilding it:
+
+* ``meta["edges_added"]``   — list of (u, v) edges present in the result but
+  not in the parent, in the *result's* switch-id space;
+* ``meta["edges_removed"]`` — list of (u, v) parent edges that did not
+  survive, in the *parent's* switch-id space;
+* ``meta["node_remap"]``    — old-id -> new-id list (-1 = dropped), present
+  only when the mutation renumbered switches (``remove_switch``); ``None``
+  otherwise.  Remaps are always monotone on surviving ids;
+* ``meta["delta_parent"]``  — ``topology.edge_fingerprint`` of the parent,
+  letting consumers verify the delta relates exactly the two topologies at
+  hand (meta dicts are copied across mutations, so unverified delta keys must
+  be treated as stale).
+
+Deltas always describe one producer call relative to its immediate input;
+chain mutations step-by-step if intermediate deltas matter.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from .topology import Topology
+from .topology import Topology, edge_delta, edge_fingerprint
 
 __all__ = ["add_switch", "remove_switch", "rewire_free_ports", "expand_to"]
 
@@ -33,7 +59,12 @@ class _Mut:
 
     def add(self, u: int, v: int) -> None:
         a, b = (u, v) if u < v else (v, u)
-        assert (a, b) not in self.edges and a != b
+        # ValueError, not assert: the no-multi-edge/no-self-loop invariant
+        # must survive ``python -O``
+        if a == b:
+            raise ValueError(f"self-loop ({u}, {v}) not allowed")
+        if (a, b) in self.edges:
+            raise ValueError(f"edge ({a}, {b}) already exists (no multi-edges)")
         self.edges.add((a, b))
         self.nbrs[u].add(v)
         self.nbrs[v].add(u)
@@ -42,6 +73,8 @@ class _Mut:
 
     def remove(self, u: int, v: int) -> None:
         a, b = (u, v) if u < v else (v, u)
+        if (a, b) not in self.edges:
+            raise ValueError(f"cannot remove non-existent edge ({a}, {b})")
         self.edges.discard((a, b))
         self.nbrs[u].discard(v)
         self.nbrs[v].discard(u)
@@ -52,6 +85,29 @@ class _Mut:
         t = self.top.with_edges(self.edges, name=name)
         t.validate()
         return t
+
+
+def _record_delta(
+    parent: Topology,
+    child: Topology,
+    node_remap: np.ndarray | None = None,
+) -> Topology:
+    """Stamp the module's delta contract on ``child.meta`` (see docstring).
+
+    Always overwrites all four keys — meta dicts propagate through
+    ``Topology.copy``, so stale delta keys from an earlier mutation must
+    never survive a new one.
+    """
+    added, removed_mask, _ = edge_delta(parent, child, node_remap)
+    child.meta["edges_added"] = [tuple(map(int, e)) for e in added]
+    child.meta["edges_removed"] = [
+        tuple(map(int, e)) for e in parent.edges[removed_mask]
+    ]
+    child.meta["node_remap"] = (
+        [int(x) for x in node_remap] if node_remap is not None else None
+    )
+    child.meta["delta_parent"] = edge_fingerprint(parent)
+    return child
 
 
 def _splice(mut: _Mut, u: int, rng: np.random.Generator) -> bool:
@@ -68,23 +124,61 @@ def _splice(mut: _Mut, u: int, rng: np.random.Generator) -> bool:
     return False
 
 
-def rewire_free_ports(top: Topology, seed: int | np.random.Generator = 0) -> Topology:
-    """Greedily match free ports pairwise (non-adjacent endpoints only)."""
-    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
-    mut = _Mut(top)
-    stall = 0
+def _rewire(mut: _Mut, rng: np.random.Generator) -> None:
+    """Exhaustively re-match free ports on ``mut`` in place (paper §4.2).
+
+    Each round either matches one non-adjacent free-port pair (candidate
+    pairs are scanned exhaustively in a seeded random order — no stall
+    counter, so the result is deterministic for a fixed seed) or, when every
+    candidate pair is adjacent, splices a switch that retains >= 2 free ports
+    into a random existing link.  Terminates when neither move exists; on any
+    connected topology where a legal matching/splice sequence exists this
+    leaves at most one free port globally.
+    """
     while True:
         cand = np.flatnonzero(mut.free > 0)
-        if len(cand) < 2 or stall > 200:
+        if int(mut.free[cand].sum()) <= 1:
             break
-        u, v = rng.choice(cand, size=2, replace=False)
-        u, v = int(u), int(v)
-        if u != v and v not in mut.nbrs[u]:
-            mut.add(u, v)
-            stall = 0
-        else:
-            stall += 1
-    return mut.finish(name=top.name)
+        moved = False
+        if len(cand) >= 2:
+            order = cand[rng.permutation(len(cand))]
+            for ii in range(len(order)):
+                u = int(order[ii])
+                for jj in range(ii + 1, len(order)):
+                    v = int(order[jj])
+                    if v not in mut.nbrs[u]:
+                        mut.add(u, v)
+                        moved = True
+                        break
+                if moved:
+                    break
+        if not moved:
+            # every free-port pair is adjacent (or only one switch has free
+            # ports): fall back to the paper's edge-swap splice for switches
+            # holding >= 2 free ports
+            for u in cand[rng.permutation(len(cand))]:
+                if mut.free[u] >= 2 and _splice(mut, int(u), rng):
+                    moved = True
+                    break
+        if not moved:
+            break  # no legal matching or splice exists
+
+
+def rewire_free_ports(top: Topology, seed: int | np.random.Generator = 0) -> Topology:
+    """Re-match free ports: exhaustive pairing plus edge-swap splice fallback.
+
+    Implements the paper's §4.2 rule completely: free-port pairs on
+    non-adjacent switches are matched until none remain (candidate pairs are
+    exhausted deterministically — no random stall cutoff), and a switch left
+    with >= 2 free ports that is adjacent to every other candidate is
+    incorporated by removing a random existing link and connecting both of
+    its ends.  For a fixed seed the result is deterministic, and at most one
+    free port remains whenever a legal matching/splice sequence exists.
+    """
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    mut = _Mut(top)
+    _rewire(mut, rng)
+    return _record_delta(top, mut.finish(name=top.name))
 
 
 def add_switch(
@@ -110,11 +204,11 @@ def add_switch(
     for _ in range(r_net // 2):
         if not _splice(mut, u, rng):
             break
+    # Odd/unsatisfied leftover ports: re-match against any other free port.
+    if mut.free[u] > 0:
+        _rewire(mut, rng)
     out = mut.finish(name=name or top.name)
-    # Odd/unsatisfied leftover port: try matching against any other free port.
-    if out.free_ports()[u] > 0:
-        out = rewire_free_ports(out, rng)
-    return out
+    return _record_delta(top, out)
 
 
 def remove_switch(
@@ -140,7 +234,17 @@ def remove_switch(
         name=top.name,
         meta=dict(top.meta),
     )
-    return rewire_free_ports(shrunk, rng)
+    mut = _Mut(shrunk)
+    _rewire(mut, rng)
+    return _record_delta(top, mut.finish(name=top.name), node_remap=remap)
+
+
+def _modal_spec(top: Topology) -> tuple[int, int]:
+    """Most common (ports, net_degree) pair across switches (ties: smallest)."""
+    spec = np.stack([top.ports, top.net_degree], axis=1)
+    uniq, counts = np.unique(spec, axis=0, return_counts=True)
+    k, r = uniq[np.argmax(counts)]
+    return int(k), int(r)
 
 
 def expand_to(
@@ -150,10 +254,22 @@ def expand_to(
     r_net: int | None = None,
     seed: int | np.random.Generator = 0,
 ) -> Topology:
-    """Grow ``top`` to ``n_switches`` by repeated single-switch additions."""
+    """Grow ``top`` to ``n_switches`` by repeated single-switch additions.
+
+    ``k_ports`` / ``r_net`` default to the topology's *modal* switch spec
+    (the most common (ports, net_degree) pair) — on heterogeneous bases
+    (e.g. LEGUP staged expansions) cloning the typical switch, not whatever
+    switch happens to be stored last.  The final topology's delta meta is
+    relative to the input ``top`` (ids are append-stable across the chain).
+    """
     rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
-    k = k_ports if k_ports is not None else int(top.ports[-1])
-    r = r_net if r_net is not None else int(top.net_degree[-1])
+    if k_ports is None or r_net is None:
+        mk, mr = _modal_spec(top)
+        k_ports = mk if k_ports is None else k_ports
+        r_net = mr if r_net is None else r_net
+    base = top
     while top.n_switches < n_switches:
-        top = add_switch(top, k, r, rng)
+        top = add_switch(top, k_ports, r_net, rng)
+    if top is not base:
+        _record_delta(base, top)
     return top

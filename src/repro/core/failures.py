@@ -4,32 +4,62 @@ Uniform-random link failures and switch failures.  A failed Jellyfish is
 "just another random graph": the degraded Topology is a first-class Topology
 and every metric/solver runs on it unchanged.  ``repro.runtime.elastic`` uses
 the same machinery to re-plan a training mesh after node loss.
+
+Delta contract
+--------------
+Both producers stamp the edge-level delta on the result's ``meta`` (same
+contract as ``core.expansion``): ``meta["edges_removed"]`` lists the failed
+links in the parent's switch-id space, ``meta["edges_added"]`` is always
+empty here, ``meta["node_remap"]`` is ``None`` (failures never renumber —
+``fail_switches`` keeps dead switches as isolated ids), and
+``meta["delta_parent"]`` fingerprints the parent so consumers like
+``core.routing.update_path_system`` can trust the recorded delta and repair
+cached APSP/path state instead of rebuilding it.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from .topology import Topology
+from .topology import Topology, edge_fingerprint
 
 __all__ = ["fail_links", "fail_switches"]
 
 
+def _record_delta(parent: Topology, child: Topology, removed: np.ndarray) -> Topology:
+    child.meta["edges_added"] = []
+    child.meta["edges_removed"] = [tuple(map(int, e)) for e in removed]
+    child.meta["node_remap"] = None
+    child.meta["delta_parent"] = edge_fingerprint(parent)
+    return child
+
+
 def fail_links(
-    top: Topology, fraction: float, seed: int | np.random.Generator = 0
+    top: Topology,
+    fraction: float = 0.0,
+    seed: int | np.random.Generator = 0,
+    n_links: int | None = None,
 ) -> Topology:
-    """Remove ``fraction`` of switch-switch links uniformly at random."""
+    """Remove ``fraction`` of switch-switch links uniformly at random.
+
+    ``n_links`` overrides the fraction with an exact count — the knob
+    cumulative failure sweeps (fig7) use to hit exact global failure levels
+    while feeding each increment through the delta-routing path.
+    """
     rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
     e = top.n_edges
-    n_fail = int(round(fraction * e))
+    n_fail = int(round(fraction * e)) if n_links is None else int(n_links)
     if n_fail == 0:
-        return top.copy()
+        out = top.copy()
+        return _record_delta(top, out, np.zeros((0, 2), dtype=np.int64))
     keep = np.ones(e, dtype=bool)
     keep[rng.choice(e, size=n_fail, replace=False)] = False
     out = top.copy()
     out.edges = top.edges[keep]
-    out.name = f"{top.name}+fail{fraction:.0%}"
-    return out
+    out.name = f"{top.name}+fail{fraction:.0%}" if n_links is None else (
+        f"{top.name}+fail{n_fail}"
+    )
+    return _record_delta(top, out, top.edges[~keep])
 
 
 def fail_switches(
@@ -39,7 +69,8 @@ def fail_switches(
     rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
     n_fail = int(round(fraction * top.n_switches))
     if n_fail == 0:
-        return top.copy()
+        out = top.copy()
+        return _record_delta(top, out, np.zeros((0, 2), dtype=np.int64))
     dead = set(rng.choice(top.n_switches, size=n_fail, replace=False).tolist())
     keep = np.array([(u not in dead and v not in dead) for u, v in top.edges], dtype=bool)
     out = top.copy()
@@ -52,4 +83,4 @@ def fail_switches(
     out.net_degree[dead_arr] = 0
     out.name = f"{top.name}+swfail{fraction:.0%}"
     out.meta = {**top.meta, "dead_switches": sorted(int(d) for d in dead)}
-    return out
+    return _record_delta(top, out, top.edges[~keep])

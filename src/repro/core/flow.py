@@ -139,6 +139,7 @@ def _mw_solve(
     owner: jnp.ndarray,  # (P,) int32
     demands: jnp.ndarray,  # (K,) f32
     inv_cap: jnp.ndarray,  # (S,) f32  (1 / capacity per directed slot)
+    x_init: jnp.ndarray,  # (P,) f32 initial per-path split (pre-normalization)
     n_comm: int,
     iters: int,
     backend: str = "scatter",
@@ -152,7 +153,7 @@ def _mw_solve(
         s = jnp.zeros((K,), jnp.float32).at[owner].add(x)
         return x / s[owner]
 
-    x0 = seg_norm(jnp.ones((P,), jnp.float32))
+    x0 = seg_norm(x_init)
 
     def body(carry, t):
         x, rel_prev, best_alpha, best_x = carry
@@ -199,23 +200,61 @@ def _mw_solve(
     return best_alpha, best_rates, 1.0 / best_alpha
 
 
+def _warm_split(ps: PathSystem, warm: "FlowResult | np.ndarray") -> np.ndarray:
+    """Initial per-path split from a predecessor flow vector via ``row_map``.
+
+    ``update_path_system`` stamps ``ps.row_map`` with each path row's index
+    into the predecessor path system; rows carried over inherit the previous
+    solution's rate as their initial split weight.  Fresh rows (and carried
+    rows the previous solve zeroed out) get a small floor share of their
+    commodity — MW updates are multiplicative, so a hard zero could never
+    recover.
+    """
+    rates = warm.rates if isinstance(warm, FlowResult) else np.asarray(warm)
+    x0 = np.ones(ps.n_paths, dtype=np.float32)
+    rm = ps.row_map
+    if rm is None or len(rates) == 0:
+        return x0
+    ok = (rm >= 0) & (rm < len(rates))
+    x0 = np.where(ok, rates[np.clip(rm, 0, len(rates) - 1)], 0.0).astype(np.float32)
+    ssum = np.bincount(ps.path_owner, weights=x0, minlength=ps.n_commodities)
+    cnt = np.bincount(ps.path_owner, minlength=ps.n_commodities)
+    mean = (ssum / np.maximum(cnt, 1)).astype(np.float32)
+    floor = np.where(mean[ps.path_owner] > 0, 0.05 * mean[ps.path_owner], 1.0)
+    return np.maximum(x0, floor)
+
+
 def mw_concurrent_flow(
-    ps: PathSystem, iters: int = 400, backend: str = "auto"
+    ps: PathSystem,
+    iters: int = 400,
+    backend: str = "auto",
+    warm: "FlowResult | np.ndarray | None" = None,
 ) -> FlowResult:
     """MW/mirror-descent max concurrent flow.
 
     ``backend``: ``"auto"`` (platform/size dispatch), ``"scatter"``,
     ``"dense"`` (incidence matmul via ops.congestion), or ``"pallas"``
     (force the fused kernel, interpret mode off-TPU).
+
+    ``warm``: a FlowResult (or raw per-path rate vector) from the
+    *predecessor* path system of a delta update; requires ``ps.row_map``
+    (set by ``routing.update_path_system``).  Warm-started solves reach a
+    given alpha quality in substantially fewer iterations on small topology
+    deltas, which is where the expansion/failure sweeps spend their time.
     """
     if ps.n_paths == 0:
         return FlowResult(0.0, np.zeros(0), np.inf, "mw", 0)
     backend = _resolve_backend(backend, ps.n_paths, ps.n_slots)
+    if warm is not None and ps.row_map is not None:
+        x_init = _warm_split(ps, warm)
+    else:
+        x_init = np.ones(ps.n_paths, dtype=np.float32)
     alpha, rates, max_load = _mw_solve(
         jnp.asarray(ps.path_edges),
         jnp.asarray(ps.path_owner),
         jnp.asarray(ps.demands, dtype=jnp.float32),
         jnp.asarray(1.0 / ps.capacities, dtype=jnp.float32),
+        jnp.asarray(x_init, dtype=jnp.float32),
         ps.n_commodities,
         iters,
         backend,

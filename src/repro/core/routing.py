@@ -38,6 +38,19 @@ the Pallas congestion kernel.  ``build_path_system`` keeps a small
 per-topology cache (APSP matrix, padded neighbor table, edge-slot lookup) so
 sweeping traffic matrices over one topology — the paper's §4 methodology —
 pays for the distance computation once.
+
+Topology deltas (paper §4.2 expansion, §4.3 failures) are first-class:
+``update_path_system(ps, top_old, top_new, comm)`` diffs the edge sets,
+repairs the cached APSP (bounded BFS-row recompute + Floyd-Warshall pivots
+over added endpoints, certified by a Bellman fixed-point check), re-enumerates
+only the commodities the delta actually touched, and splices every other
+commodity's path rows through a pure slot-id remap.  Enumeration ties are
+broken canonically (lexicographic node sequence, which survives monotone id
+compaction), so a delta-updated system is *identical* to a from-scratch
+rebuild; the
+``row_map`` it records lets ``flow.mw_concurrent_flow`` warm-start from the
+pre-mutation flow.  Expansion/failure sweeps thus cost one build plus N
+cheap deltas instead of N full rebuilds (see benchmarks/fig5_incremental.py).
 """
 
 from __future__ import annotations
@@ -49,13 +62,14 @@ from collections import OrderedDict
 import numpy as np
 
 from .metrics import apsp_hops
-from .topology import Topology
+from .topology import Topology, edge_delta, edge_fingerprint
 from .traffic import Commodities
 
 __all__ = [
     "PathSystem",
     "k_shortest_paths",
     "build_path_system",
+    "update_path_system",
     "clear_routing_cache",
 ]
 
@@ -114,9 +128,15 @@ def _apsp(adj: np.ndarray) -> np.ndarray:
     return apsp_hops(adj)
 
 
+def _cached_adj(top: Topology, entry: dict) -> np.ndarray:
+    if "adj" not in entry:
+        entry["adj"] = top.adjacency()
+    return entry["adj"]
+
+
 def _cached_dist(top: Topology, entry: dict) -> np.ndarray:
     if "dist" not in entry:
-        entry["dist"] = _apsp(top.adjacency())
+        entry["dist"] = _apsp(_cached_adj(top, entry))
     return entry["dist"]
 
 
@@ -139,15 +159,19 @@ def _cached_nbr(top: Topology, entry: dict) -> np.ndarray:
     """Padded (N, d_max) neighbor table; missing entries hold N (sentinel)."""
     if "nbr" not in entry:
         n = top.n_switches
-        deg = top.degrees()
-        dmax = int(deg.max()) if len(deg) else 0
-        nbr = np.full((n, max(dmax, 1)), n, dtype=np.int32)
-        fill = np.zeros(n, dtype=np.int64)
-        for u, v in top.edges:
-            nbr[u, fill[u]] = v
-            fill[u] += 1
-            nbr[v, fill[v]] = u
-            fill[v] += 1
+        e = top.edges
+        if len(e):
+            ends = np.concatenate([e, e[:, ::-1]])  # (2E, 2) directed
+            order = np.argsort(ends[:, 0], kind="stable")
+            u_s, v_s = ends[order, 0], ends[order, 1]
+            deg = np.bincount(u_s, minlength=n)
+            dmax = int(deg.max())
+            nbr = np.full((n, max(dmax, 1)), n, dtype=np.int32)
+            starts = np.concatenate([[0], np.cumsum(deg)[:-1]])
+            pos = np.arange(len(u_s)) - np.repeat(starts, deg)
+            nbr[u_s, pos] = v_s
+        else:
+            nbr = np.full((n, 1), n, dtype=np.int32)
         entry["nbr"] = nbr
     return entry["nbr"]
 
@@ -215,13 +239,37 @@ def _collect_completed(
 
     The cap is applied vectorized (rank-within-pair) so the Python append loop
     only ever touches rows that are actually kept (<= k per pair).
+
+    Rows completing in the same level (equal length — the only place ties can
+    occur, since expansion is level-synchronous) are ordered by lexicographic
+    node sequence before capping.  That makes the returned k-shortest *set* a
+    function of (graph, pair, k) alone, independent of neighbor-table layout
+    or slack budget — the canonical-tie property ``update_path_system``
+    relies on to splice cached paths from a pre-mutation topology and still
+    match a from-scratch rebuild exactly.  Lexicographic order specifically
+    (rather than a sequence hash, which would decorrelate tie picks) because
+    it is invariant under the monotone id compaction of ``remove_switch``:
+    the same candidates keep the same relative order after renumbering, so
+    splicing remains exact across node removals.  It also tracks the
+    enumerator's natural frontier order (neighbor tables are id-sorted), so
+    canonicalization leaves routing quality unchanged — unlike, e.g., a
+    max-node-id-first order, which systematically steers every commodity away
+    from high-id switches and measurably concentrates congestion.
     """
     if not len(pids):
         return
-    idx = np.flatnonzero(done[pids] + _rank_within_pair(pids) < k)
+    w = int(plen.max())  # columns past the longest path are constant padding
+    keys = [pref[:, c] for c in range(w - 1, -1, -1)] + [pids]
+    order = np.lexsort(keys)
+    pids_s, pref_s, plen_s = pids[order], pref[order], plen[order]
+    # pids_s is sorted (lexsort primary key), so ranks come from run starts
+    starts = np.flatnonzero(np.r_[True, pids_s[1:] != pids_s[:-1]])
+    run_start = np.repeat(starts, np.diff(np.r_[starts, len(pids_s)]))
+    rank = np.arange(len(pids_s)) - run_start
+    idx = np.flatnonzero(done[pids_s] + rank < k)
     for i in idx:
-        out[pids[i]].append(pref[i, : plen[i]].tolist())
-    np.add.at(done, pids[idx], 1)
+        out[pids_s[i]].append(pref_s[i, : plen_s[i]].tolist())
+    np.add.at(done, pids_s[idx], 1)
 
 
 def _cap_per_pair(pids: np.ndarray, cap: int) -> np.ndarray:
@@ -299,12 +347,54 @@ def _batched_round(
         keep = ~comp & (done[new_pid] < k)
         pid, node = new_pid[keep], new_node[keep]
         pref, plen = new_pref[keep], new_plen[keep]
-        if len(pid) and max_enum > 0:
+        # frontier cap can only bind when some pair COULD exceed it
+        if max_enum > 0 and len(pid) > max_enum:
             cap = _cap_per_pair(pid, max_enum)
             if not cap.all():
                 pid, node = pid[cap], node[cap]
                 pref, plen = pref[cap], plen[cap]
     return out
+
+
+def _subset_slack(
+    adj: np.ndarray,
+    dist: np.ndarray,
+    src: np.ndarray,
+    dst: np.ndarray,
+    k: int,
+) -> np.ndarray:
+    """Per-pair slack budgets from walk counts restricted to the query rows.
+
+    Same decision rule as ``_cached_walk_counts`` (w_d >= k -> slack 0,
+    w_d + w_{d+1} >= k -> 1, else 2) but computed as batched row powers
+    ``R_{L+1} = R_L @ A`` over only the |pairs| source rows — O(q * N * diam)
+    instead of the O(diam * N^3) full-power table, which is the right trade
+    for the small re-enumeration subsets of ``update_path_system``.
+    """
+    q = len(src)
+    slack = np.zeros(q, dtype=np.int64)
+    base = dist[src, dst]
+    pos = np.isfinite(base) & (base >= 1)
+    if not pos.any():
+        return slack
+    d = np.where(pos, base, 1).astype(np.int64)
+    dmax = int(d[pos].max())
+    w_d = np.zeros(q, dtype=np.float32)
+    w_d1 = np.zeros(q, dtype=np.float32)
+    r = adj[src].astype(np.float32)  # (q, N) length-1 walk counts per source
+    for length in range(1, dmax + 2):
+        hit_d = pos & (d == length)
+        if hit_d.any():
+            w_d[hit_d] = r[hit_d, dst[hit_d]]
+        hit_d1 = pos & (d == length - 1)
+        if hit_d1.any():
+            w_d1[hit_d1] = r[hit_d1, dst[hit_d1]]
+        if length <= dmax:
+            r = np.minimum(r @ adj, np.float32(2 ** 20))
+    slack[pos] = np.where(
+        w_d[pos] >= k, 0, np.where(w_d[pos] + w_d1[pos] >= k, 1, 2)
+    )
+    return slack
 
 
 def _k_shortest_unique(
@@ -317,15 +407,19 @@ def _k_shortest_unique(
     max_slack: int,
     max_enum: int,
     counts: np.ndarray | None = None,
+    slack_init: np.ndarray | None = None,
 ) -> list[list[list[int]]]:
     """k shortest paths for unique pairs with per-pair slack budgets.
 
     Because expansion is level-synchronous, paths complete in non-decreasing
-    length order, so any budget >= the minimal slack yields the same k-shortest
-    set (per-pair early stop at k).  The budget is therefore purely a cost
-    knob: walk counts decide exactly which pairs have k paths within slack 0
-    or 1 (the vast majority on low-diameter random graphs), those are
-    enumerated once at that budget, and only the rare stragglers iterate.
+    length order (ties broken canonically in ``_collect_completed``), so any
+    budget >= the minimal slack yields the same k-shortest set (per-pair early
+    stop at k).  The budget is therefore purely a cost knob: walk counts
+    decide exactly which pairs have k paths within slack 0 or 1 (the vast
+    majority on low-diameter random graphs), those are enumerated once at
+    that budget, and only the rare stragglers iterate.  ``slack_init``
+    (from ``_subset_slack``) supplies the same per-pair budgets without the
+    O(diam * N^3) walk-count table — the delta path's variant.
     """
     Q = len(src)
     results: list[list[list[int]]] = [[] for _ in range(Q)]
@@ -334,7 +428,10 @@ def _k_shortest_unique(
     if len(active) == 0:
         return results
 
-    slack = np.zeros(Q, dtype=np.int64)
+    if slack_init is not None:
+        slack = np.minimum(slack_init, max_slack)
+    else:
+        slack = np.zeros(Q, dtype=np.int64)
     if counts is not None and max_slack >= 1 and len(counts):
         d = base[active].astype(np.int64)
         pos = d >= 1  # src == dst pairs keep slack 0
@@ -348,9 +445,16 @@ def _k_shortest_unique(
     while len(active):
         still = []
         # bucket by slack: <= 1 runs without the repeated-vertex prune (the
-        # admissibility prune is already exact there), >= 2 runs with it
-        for lo_slack in (True, False):
-            sel = active[(slack[active] <= 1) == lo_slack]
+        # admissibility prune is already exact there), >= 2 runs with it.
+        # Small batches (the update_path_system re-enumeration subsets) run
+        # as one bucket with the prune on — always exact, and one round's
+        # fixed per-level numpy overhead instead of two's.
+        if len(active) <= 64:
+            buckets = [(False, active)]
+        else:
+            lo = slack[active] <= 1
+            buckets = [(True, active[lo]), (False, active[~lo])]
+        for lo_slack, sel in buckets:
             if not len(sel):
                 continue
             found = _batched_round(
@@ -422,6 +526,7 @@ def k_shortest_paths(
     max_enum: int = 4096,
     dist: np.ndarray | None = None,
     cache: bool = True,
+    use_counts: "bool | str" = True,
 ) -> list[list[list[int]]]:
     """k shortest simple paths (node sequences) for each (src, dst) pair.
 
@@ -429,6 +534,13 @@ def k_shortest_paths(
     undirected, so the k shortest t->s paths are the reverses of the s->t
     ones); each unique pair is enumerated once by the batched engine.
     ``max_enum`` bounds the per-pair frontier width per expansion level.
+    ``use_counts`` selects the slack-budget precompute: ``True`` builds (and
+    caches) the full O(diam * N^3) walk-count table — right when sweeping
+    many traffic matrices over one topology; ``"subset"`` computes budgets
+    for just the query pairs via batched row powers — right for the small
+    re-enumeration sets of ``update_path_system``; ``False`` skips budgets
+    and iterates every pair's slack from 0.  The returned path sets are
+    identical either way (budgets are purely a cost knob).
     """
     if not len(pairs):
         return []
@@ -447,7 +559,12 @@ def k_shortest_paths(
     # shortest path), so skip the O(diam * N^3) walk-count precompute
     counts = (
         _cached_walk_counts(top, entry, dist)
-        if max_slack >= 1 and k > 1
+        if use_counts is True and max_slack >= 1 and k > 1
+        else None
+    )
+    slack_init = (
+        _subset_slack(_cached_adj(top, entry), dist, keys // n, keys % n, k)
+        if use_counts == "subset" and max_slack >= 1 and k > 1
         else None
     )
     if explicit_dist:  # caller-provided APSP: pad it rather than reuse cache
@@ -458,7 +575,7 @@ def k_shortest_paths(
         dist_pad = _cached_dist_pad(top, entry, dist)
     uniq = _k_shortest_unique(
         nbr, dist, dist_pad, keys // n, keys % n, k, max_slack, max_enum,
-        counts=counts,
+        counts=counts, slack_init=slack_init,
     )
     out: list[list[list[int]]] = []
     for i in range(len(arr)):
@@ -497,6 +614,15 @@ class PathSystem:
     n_commodities: int
     node_paths: list[list[list[int]]] | None = None  # per commodity, node seqs
     unrouted: np.ndarray | None = None  # (K0,) bool: commodities with no path
+    # ---- delta pedigree (consumed by update_path_system / warm starts) ----
+    src: np.ndarray | None = None  # (K0,) commodity sources (switch ids)
+    dst: np.ndarray | None = None  # (K0,) commodity destinations
+    k: int = 8  # paths per commodity this system was built with
+    max_slack: int = 4  # slack budget this system was built with
+    row_map: np.ndarray | None = None  # (P,) row index into the predecessor
+    #   path system (-1 for freshly enumerated rows); set by
+    #   update_path_system so flow solvers can warm-start from the
+    #   predecessor's rate vector
 
     @property
     def n_slots(self) -> int:
@@ -523,23 +649,28 @@ def _paths_to_slots(
     all_paths: list[list[list[int]]],
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized conversion of node sequences to the padded slot matrix."""
+    from itertools import chain
+
     E = top.n_edges
     n = top.n_switches
-    lens = [len(p) for paths in all_paths for p in paths]
-    P = len(lens)
-    lmax_nodes = max(lens, default=2)
+    flat = [p for paths in all_paths for p in paths]
+    P = len(flat)
+    lens = np.fromiter(map(len, flat), dtype=np.int64, count=P)
+    lmax_nodes = int(lens.max()) if P else 2
     nodes = np.full((P, lmax_nodes), -1, dtype=np.int64)
-    owner = np.empty(P, dtype=np.int32)
-    row = 0
-    kept = 0
-    for paths in all_paths:
-        if not paths:
-            continue
-        for p in paths:
-            nodes[row, : len(p)] = p
-            owner[row] = kept
-            row += 1
-        kept += 1
+    if P:
+        vals = np.fromiter(
+            chain.from_iterable(flat), dtype=np.int64, count=int(lens.sum())
+        )
+        rows = np.repeat(np.arange(P), lens)
+        cols = np.arange(len(vals)) - np.repeat(np.cumsum(lens) - lens, lens)
+        nodes[rows, cols] = vals
+    per_comm = np.fromiter(map(len, all_paths), dtype=np.int64, count=len(all_paths))
+    nonempty = per_comm > 0
+    kept = np.int32(nonempty.sum())
+    owner = np.repeat(
+        np.arange(int(kept), dtype=np.int32), per_comm[nonempty]
+    )
 
     a, b = nodes[:, :-1], nodes[:, 1:]
     hop = b >= 0
@@ -591,4 +722,427 @@ def build_path_system(
         n_commodities=int(kept),
         node_paths=all_paths if keep_node_paths else None,
         unrouted=unrouted,
+        src=np.asarray(comm.src, dtype=np.int64).copy(),
+        dst=np.asarray(comm.dst, dtype=np.int64).copy(),
+        k=k,
+        max_slack=max_slack,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# delta updates (paper §4.2 expansion / §4.3 failure workloads)
+# --------------------------------------------------------------------------- #
+
+
+def _bfs_rows(adj: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    """Hop distances from each source in ``rows`` (batched BLAS frontier BFS).
+
+    The rectangular sibling of ``metrics.apsp_hops``: (len(rows), N) instead
+    of (N, N), so repairing a handful of APSP rows after a topology delta
+    costs |rows| / N of a full recompute.
+    """
+    m, n = len(rows), adj.shape[0]
+    a = (adj != 0).astype(np.float32)
+    dist = np.full((m, n), np.inf, dtype=np.float32)
+    dist[np.arange(m), rows] = 0.0
+    reach = np.zeros((m, n), dtype=np.float32)
+    reach[np.arange(m), rows] = 1.0
+    for step in range(1, n + 1):
+        newly = ((reach @ a) > 0) & ~np.isfinite(dist)
+        if not newly.any():
+            break
+        dist[newly] = step
+        reach[dist < np.inf] = 1.0
+    return dist
+
+
+def _dist_is_exact(d: np.ndarray, nbr: np.ndarray) -> bool:
+    """Check ``d`` is the exact APSP matrix of the graph behind ``nbr``.
+
+    The Bellman system ``d[s,s] = 0``, ``d[s,t] = 1 + min_{w in N(t)} d[s,w]``
+    has the true hop-distance matrix as its unique solution (downward
+    violations propagate to a smaller violator; upward ones break the
+    recurrence along a shortest path), so one O(N^2 * d_max) gather-min pass
+    certifies a candidate built from stale state.  This turns the APSP delta
+    into *construct optimistically, verify, recompute only on failure* —
+    removals rarely shift distances on a low-diameter random graph, so the
+    fallback is the exception.
+    """
+    n = d.shape[0]
+    if not (d.diagonal() == 0).all():
+        return False
+    dpad = np.concatenate([d, np.full((n, 1), np.inf, dtype=np.float32)], axis=1)
+    # chunk the gather to bound the (rows, chunk, d_max) temporary
+    step = max(1, (1 << 22) // max(n * nbr.shape[1], 1))
+    for lo in range(0, n, step):
+        cols = nbr[lo: lo + step]  # (c, d_max) neighbor lists of chunk nodes
+        best = dpad[:, cols].min(axis=2) + 1.0  # (n, c)
+        want = d[:, lo: lo + step]
+        eq = best == want
+        ar = np.arange(lo, min(lo + step, n))
+        eq[ar, ar - lo] = True  # diagonal handled above
+        if not eq.all():
+            return False
+    return True
+
+
+def _repair_dist(
+    dist_old: np.ndarray,
+    top_new: Topology,
+    kept_old: np.ndarray,
+    kept_new: np.ndarray,
+    rows: np.ndarray,
+    added: np.ndarray,
+) -> np.ndarray:
+    """Candidate APSP for ``top_new`` from ``dist_old`` plus a bounded repair.
+
+    1. Surviving rows/columns of the old matrix are copied over.
+    2. ``rows`` (new switches plus endpoints of removed edges — the entries
+       whose stale values are certainly wrong) are recomputed exactly by
+       batched BFS on the new adjacency.
+    3. Added edges are folded in Floyd-Warshall-style: seed their unit
+       entries, then pivot once through each added endpoint.  Any new
+       shortest path decomposes into old-graph segments joined at added
+       endpoints, so one pass over those pivots (in any order) folds them
+       in — the classical FW induction on the condensed graph.
+
+    The result is exact unless a removal changed some distance between
+    surviving rows; callers certify with ``_dist_is_exact`` and fall back to
+    a full ``_apsp`` when the check fails, so the construction here only has
+    to be right in the common case, never in all cases.
+    """
+    n = top_new.n_switches
+    d = np.full((n, n), np.inf, dtype=np.float32)
+    d[np.ix_(kept_new, kept_new)] = dist_old[np.ix_(kept_old, kept_old)]
+    np.fill_diagonal(d, 0.0)
+    adj = top_new.adjacency()
+    if len(rows):
+        sub = _bfs_rows(adj, rows)
+        d[rows, :] = sub
+        d[:, rows] = sub.T
+    if len(added):
+        au, av = added[:, 0], added[:, 1]
+        d[au, av] = np.minimum(d[au, av], 1.0)
+        d[av, au] = d[au, av]
+        for w in np.unique(added):
+            np.minimum(d, d[:, w, None] + d[w, None, :], out=d)
+    return d
+
+
+def _resolve_node_map(
+    top_old: Topology, top_new: Topology, node_map: np.ndarray | None
+) -> np.ndarray | None:
+    """old-id -> new-id map relating the two topologies, or None if unknown.
+
+    Priority: explicit argument; a producer-recorded ``meta["node_remap"]``
+    whose ``meta["delta_parent"]`` fingerprint proves it relates exactly these
+    two topologies; identity when ids are append-stable (n_old <= n_new, the
+    case for every producer that does not renumber).
+    """
+    if node_map is not None:
+        return np.asarray(node_map, dtype=np.int64)
+    meta = top_new.meta or {}
+    if (
+        meta.get("node_remap") is not None
+        and meta.get("delta_parent") == edge_fingerprint(top_old)
+    ):
+        return np.asarray(meta["node_remap"], dtype=np.int64)
+    if top_old.n_switches <= top_new.n_switches:
+        return np.arange(top_old.n_switches, dtype=np.int64)
+    return None
+
+
+def update_path_system(
+    ps: PathSystem,
+    top_old: Topology,
+    top_new: Topology,
+    comm: Commodities,
+    k: int | None = None,
+    max_slack: int | None = None,
+    node_map: np.ndarray | None = None,
+    dist_old: np.ndarray | None = None,
+    cache: bool = True,
+    rebuild_fraction: float = 0.25,
+    keep_node_paths: bool = False,
+) -> PathSystem:
+    """Incrementally re-route after a topology delta (expansion / failure).
+
+    Produces the path system ``build_path_system(top_new, comm, ...)`` would,
+    but treats the edge-set delta between ``top_old`` and ``top_new`` as the
+    common case (paper §4.2/§4.3: expansion steps and failures are small
+    perturbations of a random graph):
+
+    * the APSP matrix is repaired in place — batched BFS for the rows touched
+      by removals plus new switches, Floyd-Warshall pivots over added-edge
+      endpoints — instead of recomputed;
+    * k-shortest paths are re-enumerated only for commodities whose cached
+      paths cross a removed edge, whose endpoint distance changed, whose
+      endpoints are new switches, or for which an added edge admits a path
+      short enough to enter the k-shortest set;
+    * every other commodity's path rows are spliced from ``ps`` with a pure
+      slot-id remap — no ``_paths_to_slots`` re-run, no re-enumeration.
+
+    Because the enumerator breaks length ties canonically, the spliced system
+    is *identical* to a from-scratch rebuild (same path sets, same per-path
+    order), so LP/MW alphas match to solver tolerance.  ``row_map`` on the
+    result maps each path row to its row in ``ps`` (-1 for fresh rows), which
+    ``mw_concurrent_flow(..., warm=...)`` uses to warm-start from the
+    previous flow vector.
+
+    Falls back to a full ``build_path_system`` when the delta is large
+    (> ``rebuild_fraction`` of edges), the topologies cannot be related
+    (unknown renumbering), or ``ps`` lacks pedigree (src/dst or a different
+    k/max_slack).  Node ids must be stable between the two topologies unless
+    a ``node_map`` (old -> new, -1 = dropped) is supplied or recorded by the
+    producer in ``top_new.meta["node_remap"]`` (see ``core.expansion``).
+    """
+    kk = ps.k if k is None else k
+    ms = ps.max_slack if max_slack is None else max_slack
+
+    def rebuild() -> PathSystem:
+        return build_path_system(
+            top_new, comm, k=kk, max_slack=ms, cache=cache,
+            keep_node_paths=keep_node_paths,
+        )
+
+    if ps.src is None or ps.dst is None or ps.unrouted is None:
+        return rebuild()
+    if kk != ps.k or ms != ps.max_slack:
+        return rebuild()
+    nm = _resolve_node_map(top_old, top_new, node_map)
+    if nm is None:
+        return rebuild()
+
+    E_old, E_new = top_old.n_edges, top_new.n_edges
+    n_new = top_new.n_switches
+    added, removed_mask, eid_map = edge_delta(top_old, top_new, nm)
+    n_changed = len(added) + int(removed_mask.sum())
+    if n_changed > rebuild_fraction * max(E_new, 1):
+        return rebuild()
+
+    # ---- APSP: reuse / repair ------------------------------------------- #
+    if dist_old is None:
+        old_entry = _topo_cache.get(_topo_key(top_old)) if cache else None
+        dist_old = old_entry.get("dist") if old_entry else None
+    if dist_old is None:
+        # No cached predecessor APSP: recompute it (still far cheaper than a
+        # full rebuild, which would also redo walk counts and enumeration).
+        dist_old = _apsp(top_old.adjacency())
+
+    entry_new = _topo_entry(top_new, cache=cache)
+    nbr_new = _cached_nbr(top_new, entry_new)
+    if "dist" in entry_new:
+        dist_new = entry_new["dist"]
+    elif n_new < 384:
+        # below a few hundred switches the dense BLAS APSP is cheaper than
+        # candidate construction + certification — just recompute
+        dist_new = _apsp(_cached_adj(top_new, entry_new))
+        entry_new["dist"] = dist_new
+    else:
+        kept_old = np.flatnonzero(nm >= 0)
+        kept_new = nm[kept_old]
+        # rows that are certainly stale: new switches, plus endpoints of
+        # removed edges (their direct entry changed for sure); everything
+        # else is assumed unchanged and certified below
+        new_nodes = np.setdiff1d(np.arange(n_new, dtype=np.int64), kept_new)
+        removed_ends = nm[np.unique(top_old.edges[removed_mask])]
+        rows = np.union1d(removed_ends[removed_ends >= 0], new_nodes)
+        cand = _repair_dist(dist_old, top_new, kept_old, kept_new, rows, added)
+        if _dist_is_exact(cand, nbr_new):
+            dist_new = cand
+        else:  # a removal shifted distances between surviving rows
+            dist_new = _apsp(_cached_adj(top_new, entry_new))
+        entry_new["dist"] = dist_new
+
+    # ---- per-commodity reuse decision (vectorized) ----------------------- #
+    src_n = np.asarray(comm.src, dtype=np.int64)
+    dst_n = np.asarray(comm.dst, dtype=np.int64)
+    K = len(src_n)
+
+    # join new commodities against old ones on the (mapped) ordered pair key
+    s_m, t_m = nm[ps.src], nm[ps.dst]
+    alive_idx = np.flatnonzero((s_m >= 0) & (t_m >= 0))
+    key_old = s_m[alive_idx] * n_new + t_m[alive_idx]
+    order_o = np.argsort(key_old, kind="stable")  # dup pairs: first one wins
+    sorted_keys = key_old[order_o]
+    key_new = src_n * n_new + dst_n
+    pos = np.searchsorted(sorted_keys, key_new)
+    pos_ok = pos < len(sorted_keys)
+    matched = pos_ok.copy()
+    if len(sorted_keys):
+        matched[pos_ok] = sorted_keys[pos[pos_ok]] == key_new[pos_ok]
+    else:
+        matched[:] = False
+    old_of = np.full(K, -1, dtype=np.int64)
+    old_of[matched] = alive_idx[order_o[pos[matched]]]
+
+    n_kept_old = int((~ps.unrouted).sum())
+    old_kept_of = np.cumsum(~ps.unrouted) - 1  # valid where routed
+    owner_sorted = np.argsort(ps.path_owner, kind="stable")
+    owner_bounds = np.searchsorted(
+        ps.path_owner[owner_sorted], np.arange(n_kept_old + 1)
+    )
+
+    # rows whose slots touch a removed edge; per-commodity stats via reduceat
+    # over owner-grouped rows (every kept commodity owns >= 1 row)
+    slots = ps.path_edges
+    valid = slots < 2 * E_old
+    eid = np.where(valid, slots % max(E_old, 1), 0)
+    row_broken = (removed_mask[eid] & valid).any(axis=1) if E_old else (
+        np.zeros(len(slots), dtype=bool)
+    )
+    cnt = np.diff(owner_bounds)
+    if n_kept_old:
+        starts = owner_bounds[:-1]
+        maxlen = np.maximum.reduceat(
+            ps.path_len[owner_sorted].astype(np.int64), starts
+        )
+        broken_kept = np.maximum.reduceat(
+            row_broken[owner_sorted].astype(np.uint8), starts
+        ).astype(bool)
+    else:
+        maxlen = np.zeros(0, dtype=np.int64)
+        broken_kept = np.zeros(0, dtype=bool)
+
+    # Added-edge perturbation test, per new commodity.  An added edge can
+    # only enter a pair's k-shortest set with a path no longer than the
+    # pair's kept budget: strictly shorter always displaces, and a
+    # tie-length candidate can reshuffle the canonical tie selection — so
+    # any admissible added-edge path at or under the budget forces a
+    # re-enumeration.
+    d_pair_new = dist_new[src_n, dst_n]
+    if len(added):
+        au, av = added[:, 0], added[:, 1]
+        via_added = np.minimum(
+            dist_new[src_n][:, au] + dist_new[dst_n][:, av],
+            dist_new[src_n][:, av] + dist_new[dst_n][:, au],
+        ).min(axis=1) + 1.0  # shortest path length through any added edge
+    else:
+        via_added = np.full(K, np.inf, dtype=np.float32)
+
+    reuse = np.zeros(K, dtype=bool)
+    mi = old_of[matched]  # old commodity index per matched new commodity
+    m_js = np.flatnonzero(matched)
+    unr_old = ps.unrouted[mi]
+    # previously-unrouted pairs stay reusable iff still disconnected
+    still_cut = ~np.isfinite(d_pair_new[m_js])
+    reuse[m_js[unr_old]] = still_cut[unr_old]
+    # routed pairs: intact rows, unchanged distance, no added-edge shortcut
+    r_js = m_js[~unr_old]
+    r_mi = mi[~unr_old]
+    ci = old_kept_of[r_mi]
+    ok = ~broken_kept[ci]
+    ok &= dist_old[ps.src[r_mi], ps.dst[r_mi]] == d_pair_new[r_js]
+    budget = np.where(
+        cnt[ci] >= kk, maxlen[ci].astype(np.float64), d_pair_new[r_js] + ms
+    )
+    ok &= via_added[r_js] > budget
+    reuse[r_js] = ok
+
+    # ---- re-enumerate the rest ------------------------------------------ #
+    enum_js = np.flatnonzero(~reuse)
+    pairs = [(int(src_n[j]), int(dst_n[j])) for j in enum_js]
+    if cache:
+        enum_paths = k_shortest_paths(
+            top_new, pairs, k=kk, max_slack=ms, cache=True,
+            use_counts="subset",
+        )
+    else:
+        enum_paths = k_shortest_paths(
+            top_new, pairs, k=kk, max_slack=ms, dist=dist_new, cache=False,
+            use_counts="subset",
+        )
+    pe_e, len_e, owner_e, kept_e = _paths_to_slots(top_new, entry_new, enum_paths)
+
+    # ---- splice (vectorized) --------------------------------------------- #
+    # old directed slot -> new directed slot (surviving edges keep identity
+    # up to renumbering; the sentinel maps to the new sentinel)
+    slot_map = np.full(2 * E_old + 1, 2 * E_new, dtype=np.int32)
+    surv = np.flatnonzero(eid_map >= 0)
+    slot_map[surv] = eid_map[surv].astype(np.int32)
+    slot_map[surv + E_old] = (eid_map[surv] + E_new).astype(np.int32)
+
+    # per new commodity: 0 = unrouted, 1 = spliced from ps, 2 = enumerated
+    stat = np.zeros(K, dtype=np.int8)
+    cnt_j = np.zeros(K, dtype=np.int64)
+    ru_js = np.flatnonzero(reuse & ~ps.unrouted[np.maximum(old_of, 0)] & (old_of >= 0))
+    ru_c = old_kept_of[old_of[ru_js]]
+    stat[ru_js] = 1
+    cnt_j[ru_js] = cnt[ru_c]
+    has_paths = np.fromiter(
+        (len(p) > 0 for p in enum_paths), dtype=bool, count=len(enum_paths)
+    )
+    en_js = enum_js[has_paths]
+    stat[en_js] = 2
+    cnt_j[en_js] = np.diff(
+        np.searchsorted(owner_e, np.arange(int(kept_e) + 1))
+    )
+    unrouted_new = stat == 0
+
+    kept_js = np.flatnonzero(stat > 0)
+    counts = cnt_j[kept_js]
+    P_new = int(counts.sum())
+    n_seq = len(kept_js)
+    owner_final = np.repeat(np.arange(n_seq, dtype=np.int32), counts)
+    flags = np.repeat(stat[kept_js], counts)
+    old_pos = np.flatnonzero(flags == 1)
+    enum_pos = np.flatnonzero(flags == 2)
+
+    # gather old rows group-by-group in commodity order (vectorized ranges)
+    ru_in_kept = stat[kept_js] == 1
+    c_seq = old_kept_of[old_of[kept_js[ru_in_kept]]]
+    starts, lens = owner_bounds[c_seq], cnt[c_seq]
+    total = int(lens.sum())
+    if total:
+        offs = np.repeat(starts, lens) + (
+            np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+        )
+        old_rows = owner_sorted[offs]
+    else:
+        old_rows = np.zeros(0, dtype=np.int64)
+    enum_rows = np.arange(len(pe_e), dtype=np.int64)  # pe_e is already in order
+
+    w_old = ps.path_edges.shape[1] if len(old_pos) else 0
+    w_new = pe_e.shape[1] if len(enum_pos) else 0
+    lmax = max(w_old, w_new, 1)
+    pe_final = np.full((P_new, lmax), 2 * E_new, dtype=np.int32)
+    len_final = np.zeros(P_new, dtype=np.int32)
+    row_map = np.full(P_new, -1, dtype=np.int64)
+    if len(old_pos):
+        pe_final[old_pos[:, None], np.arange(w_old)[None, :]] = slot_map[
+            ps.path_edges[old_rows]
+        ]
+        len_final[old_pos] = ps.path_len[old_rows]
+        row_map[old_pos] = old_rows
+    if len(enum_pos):
+        pe_final[enum_pos[:, None], np.arange(w_new)[None, :]] = pe_e[enum_rows]
+        len_final[enum_pos] = len_e[enum_rows]
+
+    node_paths_new: list[list[list[int]]] | None = None
+    if keep_node_paths and ps.node_paths is not None:
+        node_paths_new = []
+        cursor = {int(j): p for j, p in zip(enum_js, enum_paths)}
+        for j in range(K):
+            if stat[j] == 1:
+                node_paths_new.append(
+                    [[int(nm[x]) for x in p] for p in ps.node_paths[old_of[j]]]
+                )
+            else:
+                node_paths_new.append(cursor.get(j, []))
+
+    return PathSystem(
+        n_edges=E_new,
+        path_edges=pe_final,
+        path_len=len_final,
+        path_owner=owner_final,
+        demands=comm.demand[~unrouted_new].astype(np.float32),
+        capacities=np.ones(2 * E_new, dtype=np.float32),
+        n_commodities=n_seq,
+        node_paths=node_paths_new,
+        unrouted=unrouted_new,
+        src=src_n.copy(),
+        dst=dst_n.copy(),
+        k=kk,
+        max_slack=ms,
+        row_map=row_map,
     )

@@ -16,11 +16,18 @@ expansion mutate a light adjacency-set view.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Iterable, Sequence
 
 import numpy as np
 
-__all__ = ["Topology", "edges_to_adj", "adj_to_edges"]
+__all__ = [
+    "Topology",
+    "edges_to_adj",
+    "adj_to_edges",
+    "edge_fingerprint",
+    "edge_delta",
+]
 
 
 def edges_to_adj(n: int, edges: np.ndarray, dtype=np.float32) -> np.ndarray:
@@ -38,6 +45,75 @@ def adj_to_edges(adj: np.ndarray) -> np.ndarray:
     iu = np.triu_indices(adj.shape[0], k=1)
     mask = adj[iu] != 0
     return np.stack([iu[0][mask], iu[1][mask]], axis=1).astype(np.int64)
+
+
+def edge_fingerprint(top: "Topology") -> str:
+    """Stable hex digest of (n_switches, edge set) — the delta-contract key.
+
+    Mutation producers (``core.expansion``, ``core.failures``) stamp
+    ``meta["delta_parent"] = edge_fingerprint(parent)`` on their results so
+    consumers (``core.routing.update_path_system``) can verify that a recorded
+    ``node_remap`` really relates the two topologies at hand.
+    """
+    h = hashlib.sha1(f"{top.n_switches}:".encode())
+    h.update(np.ascontiguousarray(top.edges).tobytes())
+    return h.hexdigest()
+
+
+def edge_delta(
+    old: "Topology",
+    new: "Topology",
+    node_map: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Diff two edge sets under an (optional) old->new node renumbering.
+
+    ``node_map`` maps old switch ids to new ids (-1 for dropped switches) and
+    must be strictly increasing on surviving ids — the invariant every
+    producer in this codebase preserves (renumbering only ever compacts ids),
+    which keeps the u < v edge orientation stable across the map.  Identity
+    when omitted.
+
+    Returns ``(added, removed_mask, eid_map)``:
+
+    * ``added``        — (A, 2) edges of ``new`` absent from mapped ``old``
+                         (new-id space),
+    * ``removed_mask`` — (E_old,) bool, True where an old edge did not survive
+                         (including edges incident to dropped switches),
+    * ``eid_map``      — (E_old,) int64, old edge id -> new edge id, -1 where
+                         removed.
+    """
+    n_new = new.n_switches
+    if node_map is None:
+        nm = np.arange(old.n_switches, dtype=np.int64)
+    else:
+        nm = np.asarray(node_map, dtype=np.int64)
+        if len(nm) != old.n_switches:
+            raise ValueError("node_map length must equal old.n_switches")
+        kept = nm[nm >= 0]
+        if len(kept) > 1 and not np.all(np.diff(kept) > 0):
+            raise ValueError("node_map must be strictly increasing on kept ids")
+        if len(kept) and (kept.max() >= n_new):
+            raise ValueError("node_map maps outside the new topology")
+    E_old = old.n_edges
+    eid_map = np.full(E_old, -1, dtype=np.int64)
+    if E_old:
+        me = nm[old.edges]  # (E_old, 2); -1 marks a dropped endpoint
+        alive = (me >= 0).all(axis=1)
+        old_keys = me[alive, 0] * n_new + me[alive, 1]
+        new_keys = new.edges[:, 0] * n_new + new.edges[:, 1]  # sorted by invariant
+        pos = np.searchsorted(new_keys, old_keys)
+        pos_ok = pos < len(new_keys)
+        found = pos_ok.copy()
+        found[pos_ok] = new_keys[pos[pos_ok]] == old_keys[pos_ok]
+        alive_ids = np.flatnonzero(alive)
+        eid_map[alive_ids[found]] = pos[found]
+        surviving_new = np.zeros(new.n_edges, dtype=bool)
+        surviving_new[pos[found]] = True
+    else:
+        surviving_new = np.zeros(new.n_edges, dtype=bool)
+    added = new.edges[~surviving_new]
+    removed_mask = eid_map < 0
+    return added, removed_mask, eid_map
 
 
 @dataclasses.dataclass

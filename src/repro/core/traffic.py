@@ -15,7 +15,14 @@ import numpy as np
 
 from .topology import Topology
 
-__all__ = ["Commodities", "random_permutation_traffic", "all_to_all_traffic"]
+__all__ = [
+    "Commodities",
+    "random_permutation_traffic",
+    "all_to_all_traffic",
+    "random_server_permutation",
+    "extend_server_permutation",
+    "permutation_commodities",
+]
 
 
 @dataclasses.dataclass
@@ -40,24 +47,58 @@ def _server_to_switch(top: Topology) -> np.ndarray:
     return np.repeat(np.arange(top.n_switches), top.servers_per_switch)
 
 
-def random_permutation_traffic(
-    top: Topology, seed: int | np.random.Generator = 0
-) -> Commodities:
-    """Uniform random derangement of servers, aggregated per switch pair."""
+def random_server_permutation(
+    n_servers: int, seed: int | np.random.Generator = 0
+) -> np.ndarray:
+    """Uniform random server permutation with fixed points removed."""
     rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
-    host = _server_to_switch(top)
-    n = len(host)
-    if n < 2:
+    if n_servers < 2:
         raise ValueError("need at least two servers for permutation traffic")
-    perm = rng.permutation(n)
-    # Fix fixed points by cyclic shift among them (keeps permutation uniform enough;
-    # the paper just requires "sends to a single other server").
-    fixed = np.flatnonzero(perm == np.arange(n))
+    perm = rng.permutation(n_servers)
+    # Fix fixed points by cyclic shift among them (keeps permutation uniform
+    # enough; the paper just requires "sends to a single other server").
+    fixed = np.flatnonzero(perm == np.arange(n_servers))
     if len(fixed) == 1:
-        other = (fixed[0] + 1) % n
+        other = (fixed[0] + 1) % n_servers
         perm[fixed[0]], perm[other] = perm[other], perm[fixed[0]]
     elif len(fixed) > 1:
         perm[fixed] = perm[np.roll(fixed, 1)]
+    return perm
+
+
+def extend_server_permutation(
+    perm: np.ndarray, n_servers: int, seed: int | np.random.Generator = 0
+) -> np.ndarray:
+    """Grow a server permutation to ``n_servers`` by uniform cycle insertion.
+
+    The incremental-expansion workload (paper §4.2): each new server splices
+    into the cycle structure after a uniformly chosen existing server
+    (``P[new] = P[z]; P[z] = new`` — the classical sequential construction of
+    a uniform permutation, minus the fixed-point option, so no new fixed
+    points appear).  Each insertion redirects exactly one existing server,
+    so consecutive traffic matrices differ in O(new servers) commodities —
+    which is what lets ``routing.update_path_system`` splice cached paths
+    for the rest.
+    """
+    rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
+    m = len(perm)
+    if n_servers < m:
+        raise ValueError("permutation cannot shrink; regenerate instead")
+    out = np.concatenate([perm, np.arange(m, n_servers)])
+    for x in range(m, n_servers):
+        z = int(rng.integers(0, x))
+        out[x] = out[z]
+        out[z] = x
+    return out
+
+
+def permutation_commodities(top: Topology, perm: np.ndarray) -> Commodities:
+    """Aggregate a server-level permutation to switch-level commodities."""
+    host = _server_to_switch(top)
+    if len(perm) != len(host):
+        raise ValueError(
+            f"permutation covers {len(perm)} servers, topology hosts {len(host)}"
+        )
     src_sw = host
     dst_sw = host[perm]
     cross = src_sw != dst_sw
@@ -67,8 +108,16 @@ def random_permutation_traffic(
         src=(uniq // top.n_switches).astype(np.int64),
         dst=(uniq % top.n_switches).astype(np.int64),
         demand=counts.astype(np.float64),
-        n_flows=n,
+        n_flows=len(perm),
     )
+
+
+def random_permutation_traffic(
+    top: Topology, seed: int | np.random.Generator = 0
+) -> Commodities:
+    """Uniform random derangement of servers, aggregated per switch pair."""
+    n = int(top.servers_per_switch.sum())
+    return permutation_commodities(top, random_server_permutation(n, seed))
 
 
 def all_to_all_traffic(top: Topology) -> Commodities:

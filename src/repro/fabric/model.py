@@ -22,7 +22,9 @@ from ..core import expansion, failures
 from ..core.fattree import fattree
 from ..core.jellyfish import jellyfish
 from ..core.metrics import path_stats
+from ..core.routing import PathSystem, build_path_system, update_path_system
 from ..core.topology import Topology
+from ..core.traffic import Commodities
 from .collectives import LinkSpec
 from .embedding import RingEmbedding, all_to_all_congestion, embed_ring
 
@@ -31,12 +33,21 @@ __all__ = ["FabricModel", "make_fabric"]
 
 @dataclasses.dataclass
 class FabricModel:
-    """Physical inter-pod fabric + link model + cached ring embedding."""
+    """Physical inter-pod fabric + link model + cached ring embedding.
+
+    Mutation methods (``expand``/``fail``/``remove``) thread the predecessor
+    topology and its cached path system into the new model, so the first
+    ``path_system`` call after a mutation goes through the delta-routing
+    engine (``core.routing.update_path_system``) instead of a full rebuild —
+    one build at launch, cheap deltas for every elastic event after.
+    """
 
     topology: Topology
     link: LinkSpec
     name: str = "fabric"
     _ring: RingEmbedding | None = None
+    _ps: PathSystem | None = None  # cached path system (last comm routed)
+    _parent: "tuple[Topology, PathSystem] | None" = None  # delta pedigree
 
     # ------------------------------------------------------------------ #
     def ring(self, members: np.ndarray | None = None, refresh: bool = False) -> RingEmbedding:
@@ -63,24 +74,40 @@ class FabricModel:
             f"{self.name}: {self.topology.describe()} | paths {st} | {emb.summary()}"
         )
 
+    # ------------------------- routing state -------------------------- #
+    def path_system(self, comm: Commodities, k: int = 8) -> PathSystem:
+        """Route ``comm`` over the fabric, incrementally when possible.
+
+        After an ``expand``/``fail``/``remove``, the predecessor's cached
+        path system is spliced forward through the recorded topology delta;
+        only commodities the delta actually touched are re-enumerated.  The
+        result is cached so the next mutation can chain from it.
+        """
+        if self._parent is not None:
+            top_old, ps_old = self._parent
+            ps = update_path_system(ps_old, top_old, self.topology, comm, k=k)
+        else:
+            ps = build_path_system(self.topology, comm, k=k)
+        self._ps = ps
+        self._parent = None  # chained: future mutations splice from ps
+        return ps
+
+    def _child(self, top: Topology) -> "FabricModel":
+        parent = (self.topology, self._ps) if self._ps is not None else None
+        return FabricModel(top, self.link, self.name, _parent=parent)
+
     # ----------------------- elasticity / faults ---------------------- #
     def expand(self, n_new: int, seed: int = 0) -> "FabricModel":
         """Add pods via the paper's incremental expansion; re-embeds rings."""
         top = self.topology
-        k = int(top.ports[-1])
-        r = int(top.net_degree[-1])
-        top = expansion.expand_to(top, top.n_switches + n_new, k, r, seed=seed)
-        return FabricModel(top, self.link, self.name)
+        top = expansion.expand_to(top, top.n_switches + n_new, seed=seed)
+        return self._child(top)
 
     def fail(self, link_fraction: float, seed: int = 0) -> "FabricModel":
-        return FabricModel(
-            failures.fail_links(self.topology, link_fraction, seed), self.link, self.name
-        )
+        return self._child(failures.fail_links(self.topology, link_fraction, seed))
 
     def remove(self, pod: int, seed: int = 0) -> "FabricModel":
-        return FabricModel(
-            expansion.remove_switch(self.topology, pod, seed), self.link, self.name
-        )
+        return self._child(expansion.remove_switch(self.topology, pod, seed))
 
 
 def make_fabric(

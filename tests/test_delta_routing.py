@@ -1,0 +1,357 @@
+"""Delta-routing engine (PR 2): update_path_system ≡ build_path_system,
+producer delta metadata, the rewired rewire_free_ports, _Mut invariants,
+expand_to's modal default, and MW warm starts.
+
+The central property: after any chain of topology mutations, the spliced
+path system must be *exactly* what a from-scratch rebuild would produce —
+same unrouted set, same per-commodity path multisets, LP alpha equal to
+solver tolerance (the enumerator's canonical tie order makes this an
+equality of path sets, not just of objectives).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Topology,
+    add_switch,
+    build_path_system,
+    edge_delta,
+    edge_fingerprint,
+    expand_to,
+    extend_server_permutation,
+    fail_links,
+    fail_switches,
+    jellyfish,
+    jellyfish_heterogeneous,
+    lp_concurrent_flow,
+    mw_concurrent_flow,
+    permutation_commodities,
+    random_permutation_traffic,
+    random_server_permutation,
+    remove_switch,
+    rewire_free_ports,
+    update_path_system,
+)
+from repro.core.expansion import _Mut
+from repro.core.traffic import Commodities
+
+from _property import given, settings, st  # hypothesis or deterministic shim
+
+
+# --------------------------------------------------------------------------- #
+# update_path_system ≡ build_path_system
+# --------------------------------------------------------------------------- #
+
+
+def _assert_equivalent(ps, full):
+    __tracebackhide__ = True
+    assert np.array_equal(ps.unrouted, full.unrouted)
+    assert ps.n_commodities == full.n_commodities
+    assert ps.n_paths == full.n_paths
+    # identical path sets row-for-row (canonical ties), modulo padding width
+    w = max(ps.path_edges.shape[1], full.path_edges.shape[1])
+    a = np.full((ps.n_paths, w), 2 * ps.n_edges, dtype=np.int32)
+    a[:, : ps.path_edges.shape[1]] = ps.path_edges
+    b = np.full((full.n_paths, w), 2 * full.n_edges, dtype=np.int32)
+    b[:, : full.path_edges.shape[1]] = full.path_edges
+    assert np.array_equal(a, b)
+    assert np.array_equal(ps.path_owner, full.path_owner)
+    if ps.n_paths:
+        a1 = lp_concurrent_flow(ps).alpha
+        a2 = lp_concurrent_flow(full).alpha
+        assert a1 == pytest.approx(a2, abs=1e-6)
+
+
+def _remap_comm(comm, node_remap):
+    nm = np.asarray(node_remap)
+    keep = (nm[comm.src] >= 0) & (nm[comm.dst] >= 0)
+    return Commodities(
+        src=nm[comm.src[keep]],
+        dst=nm[comm.dst[keep]],
+        demand=comm.demand[keep],
+        n_flows=int(keep.sum()),
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_update_equals_build_over_mutation_chain(seed):
+    """Randomized add/remove/fail sequences keep delta ≡ rebuild exactly."""
+    rng = np.random.default_rng(seed)
+    top = jellyfish(26, 8, 5, seed=seed % 97)
+    perm = random_server_permutation(top.n_servers, seed=seed % 89)
+    comm = permutation_commodities(top, perm)
+    ps = build_path_system(top, comm, k=4)
+    for _ in range(4):
+        kind = int(rng.integers(0, 3))
+        if kind == 0:
+            tn = add_switch(top, 8, 5, seed=int(rng.integers(1 << 30)))
+            perm = extend_server_permutation(
+                perm, tn.n_servers, seed=int(rng.integers(1 << 30))
+            )
+            comm = permutation_commodities(tn, perm)
+        elif kind == 1:
+            tn = fail_links(top, 0.06, seed=int(rng.integers(1 << 30)))
+        else:
+            tn = remove_switch(
+                top, int(rng.integers(top.n_switches)),
+                seed=int(rng.integers(1 << 30)),
+            )
+            comm = _remap_comm(comm, tn.meta["node_remap"])
+            # the server permutation is invalidated by renumbering; keep the
+            # remapped commodity set and stop extending it
+            perm = None
+        ps = update_path_system(ps, top, tn, comm)
+        full = build_path_system(tn, comm, k=4, cache=False)
+        _assert_equivalent(ps, full)
+        top = tn
+        if perm is None and kind == 2:
+            # regenerate a consistent permutation for later add steps
+            perm = random_server_permutation(
+                top.n_servers, seed=int(rng.integers(1 << 30))
+            )
+
+
+def test_update_handles_disconnection_and_reconnection():
+    """Commodities crossing a cut become unrouted and return after repair."""
+    edges = [(0, 1), (0, 2), (1, 3), (2, 3), (4, 5), (4, 6), (5, 7), (6, 7),
+             (3, 4)]
+    top = Topology.regular(8, 5, 3, edges)
+    comm = Commodities(
+        src=np.array([0, 1, 4]), dst=np.array([3, 6, 7]),
+        demand=np.ones(3), n_flows=3,
+    )
+    ps = build_path_system(top, comm, k=4)
+    assert not ps.unrouted.any()
+    # cut the bridge (3, 4): island pairs become unroutable
+    cut = top.with_edges([e for e in edges if e != (3, 4)])
+    ps_cut = update_path_system(ps, top, cut, comm)
+    full_cut = build_path_system(cut, comm, k=4, cache=False)
+    _assert_equivalent(ps_cut, full_cut)
+    assert ps_cut.unrouted.tolist() == [False, True, False]
+    # restore it: the unrouted commodity comes back
+    ps_back = update_path_system(ps_cut, cut, top, comm)
+    full_back = build_path_system(top, comm, k=4, cache=False)
+    _assert_equivalent(ps_back, full_back)
+    assert not ps_back.unrouted.any()
+
+
+def test_update_with_changed_commodity_set():
+    """Pairs may appear/disappear between updates; demands may change."""
+    top = jellyfish(24, 8, 5, seed=3)
+    comm1 = random_permutation_traffic(top, seed=0)
+    ps = build_path_system(top, comm1, k=4)
+    tn = fail_links(top, 0.05, seed=1)
+    comm2 = random_permutation_traffic(tn, seed=7)  # unrelated matrix
+    ps2 = update_path_system(ps, top, tn, comm2)
+    full2 = build_path_system(tn, comm2, k=4, cache=False)
+    _assert_equivalent(ps2, full2)
+
+
+def test_update_falls_back_on_large_delta():
+    top = jellyfish(30, 8, 5, seed=0)
+    comm = random_permutation_traffic(top, seed=0)
+    ps = build_path_system(top, comm, k=4)
+    wrecked = fail_links(top, 0.6, seed=2)
+    ps2 = update_path_system(ps, top, wrecked, comm)
+    full = build_path_system(wrecked, comm, k=4, cache=False)
+    assert np.array_equal(ps2.unrouted, full.unrouted)
+    if ps2.n_paths:
+        assert lp_concurrent_flow(ps2).alpha == pytest.approx(
+            lp_concurrent_flow(full).alpha, abs=1e-6
+        )
+
+
+def test_update_requires_relatable_topologies():
+    """Unrelatable shrink (no recorded remap) degrades to a full rebuild."""
+    a = jellyfish(20, 8, 5, seed=0)
+    b = jellyfish(18, 8, 5, seed=1)  # smaller, no node_remap metadata
+    comm_b = random_permutation_traffic(b, seed=0)
+    comm_a = random_permutation_traffic(a, seed=0)
+    ps = build_path_system(a, comm_a, k=4)
+    ps2 = update_path_system(ps, a, b, comm_b)
+    full = build_path_system(b, comm_b, k=4, cache=False)
+    _assert_equivalent(ps2, full)
+
+
+# --------------------------------------------------------------------------- #
+# producer delta metadata
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_producers_record_exact_edge_delta(seed):
+    top = jellyfish(22, 9, 6, seed=seed % 53)
+    muts = [
+        add_switch(top, 9, 6, seed=seed),
+        fail_links(top, 0.1, seed=seed),
+        fail_switches(top, 0.1, seed=seed),
+        remove_switch(top, seed % top.n_switches, seed=seed),
+        rewire_free_ports(fail_links(top, 0.1, seed=seed), seed=seed),
+    ]
+    for tn in muts:
+        assert tn.meta["delta_parent"] is not None
+        nm = tn.meta.get("node_remap")
+        base = tn.meta["delta_parent"]
+        # rewire-of-failed is a chained mutation: its parent is the failed
+        # topology, not `top`
+        parent = top if base == edge_fingerprint(top) else None
+        if parent is None:
+            continue
+        added, removed_mask, _ = edge_delta(parent, tn, nm)
+        assert sorted(map(tuple, added.tolist())) == sorted(
+            tn.meta["edges_added"]
+        )
+        assert sorted(map(tuple, parent.edges[removed_mask].tolist())) == sorted(
+            tn.meta["edges_removed"]
+        )
+
+
+def test_expand_to_delta_relative_to_base():
+    top = jellyfish(20, 8, 5, seed=0)
+    grown = expand_to(top, 26, seed=1)
+    assert grown.meta["delta_parent"] == edge_fingerprint(top)
+    added, removed_mask, _ = edge_delta(top, grown)
+    assert sorted(map(tuple, added.tolist())) == sorted(grown.meta["edges_added"])
+    assert sorted(map(tuple, top.edges[removed_mask].tolist())) == sorted(
+        grown.meta["edges_removed"]
+    )
+
+
+# --------------------------------------------------------------------------- #
+# rewire_free_ports: §4.2 corner cases
+# --------------------------------------------------------------------------- #
+
+
+def test_rewire_matches_nonadjacent_pairs_deterministically():
+    top = jellyfish(30, 10, 6, seed=1)
+    failed = fail_links(top, 0.2, seed=2)
+    a = rewire_free_ports(failed, seed=5)
+    b = rewire_free_ports(failed, seed=5)
+    assert np.array_equal(a.edges, b.edges)  # fixed seed -> fixed result
+    a.validate()
+    assert a.free_ports().sum() <= 1 or a.free_ports().max() <= 1
+
+
+def test_rewire_splices_switch_adjacent_to_all_candidates():
+    """A switch with >= 2 free ports adjacent to every candidate must be
+    incorporated by an edge swap (remove a link, connect both ends)."""
+    # node 0: connected to 1, 2 with capacity for 4 links (2 free ports);
+    # disjoint triangle 3-4-5 supplies a removable non-adjacent link
+    edges = [(0, 1), (0, 2), (1, 2), (3, 4), (3, 5), (4, 5)]
+    net = np.array([4, 2, 2, 2, 2, 2])
+    top = Topology(6, np.asarray(sorted(edges), dtype=np.int64),
+                   ports=net + 1, net_degree=net, name="splice-corner")
+    assert top.free_ports().tolist() == [2, 0, 0, 0, 0, 0]
+    out = rewire_free_ports(top, seed=0)
+    out.validate()
+    assert out.free_ports().sum() == 0  # both ports incorporated via splice
+    assert out.is_connected()
+    # old stall-counter behavior left node 0 stranded; also determinism:
+    assert np.array_equal(out.edges, rewire_free_ports(top, seed=0).edges)
+
+
+def test_rewire_terminates_when_no_legal_move_exists():
+    # complete graph K4 with slack net_degree: free ports exist but no
+    # non-adjacent pair and no splice target (every edge touches every node's
+    # neighborhood) — must terminate and leave the graph unchanged
+    edges = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]
+    top = Topology.regular(4, 6, 5, edges)
+    assert top.free_ports().sum() == 8
+    out = rewire_free_ports(top, seed=3)
+    assert np.array_equal(out.edges, top.edges)
+
+
+def test_rewire_single_free_port_left_alone():
+    # two adjacent switches with one free port each: no legal matching
+    edges = [(0, 1), (0, 2), (1, 2)]
+    net = np.array([3, 3, 2])
+    top = Topology(3, np.asarray(edges, dtype=np.int64),
+                   ports=net + 1, net_degree=net)
+    out = rewire_free_ports(top, seed=0)
+    assert np.array_equal(out.edges, top.edges)
+
+
+# --------------------------------------------------------------------------- #
+# _Mut invariants survive python -O (ValueError, not assert)
+# --------------------------------------------------------------------------- #
+
+
+def test_mut_add_rejects_duplicate_and_self_loop():
+    top = jellyfish(10, 6, 4, seed=0)
+    mut = _Mut(top.copy())
+    u, v = map(int, top.edges[0])
+    with pytest.raises(ValueError, match="already exists"):
+        mut.add(u, v)
+    with pytest.raises(ValueError, match="self-loop"):
+        mut.add(u, u)
+
+
+def test_mut_remove_rejects_missing_edge():
+    top = jellyfish(10, 6, 4, seed=0)
+    mut = _Mut(top.copy())
+    present = {tuple(e) for e in top.edges.tolist()}
+    missing = next(
+        (a, b)
+        for a in range(10)
+        for b in range(a + 1, 10)
+        if (a, b) not in present
+    )
+    with pytest.raises(ValueError, match="non-existent"):
+        mut.remove(*missing)
+
+
+# --------------------------------------------------------------------------- #
+# expand_to modal spec default
+# --------------------------------------------------------------------------- #
+
+
+def test_expand_to_defaults_to_modal_spec():
+    # heterogeneous base: 10 switches of (8, 5), last one (16, 12) — the old
+    # default cloned the *last* switch's outlier spec
+    ports = np.array([8] * 10 + [16])
+    servers = np.array([3] * 10 + [4])
+    top = jellyfish_heterogeneous(ports, servers, seed=0)
+    grown = expand_to(top, 15, seed=1)
+    assert grown.n_switches == 15
+    assert grown.ports[11:].tolist() == [8] * 4
+    assert grown.net_degree[11:].tolist() == [5] * 4
+    grown.validate()
+
+
+# --------------------------------------------------------------------------- #
+# MW warm start via row_map
+# --------------------------------------------------------------------------- #
+
+
+def test_mw_warm_start_matches_cold_quality():
+    top = jellyfish(30, 10, 6, seed=2)
+    comm = random_permutation_traffic(top, seed=0)
+    ps = build_path_system(top, comm, k=8)
+    cold0 = mw_concurrent_flow(ps, iters=150)
+    tn = fail_links(top, 0.05, seed=1)
+    ps2 = update_path_system(ps, top, tn, comm)
+    assert ps2.row_map is not None and (ps2.row_map >= 0).any()
+    warm = mw_concurrent_flow(ps2, iters=60, warm=cold0)
+    cold = mw_concurrent_flow(ps2, iters=150)
+    # warm solve at 40% of the iterations lands within a few percent
+    assert warm.alpha >= 0.9 * cold.alpha
+    # and is feasible
+    loads = ps2.loads(warm.rates)
+    assert (loads <= ps2.capacities * (1 + 1e-4)).all()
+
+
+def test_fabric_path_system_uses_delta_chain():
+    from repro.fabric import make_fabric
+
+    fabric = make_fabric("jellyfish", n_pods=32, degree=6, seed=0)
+    comm = random_permutation_traffic(fabric.topology, seed=0)
+    ps = fabric.path_system(comm)
+    assert ps.row_map is None  # first build
+    f2 = fabric.fail(0.05, seed=1)
+    ps2 = f2.path_system(comm)
+    assert ps2.row_map is not None and (ps2.row_map >= 0).any()
+    full = build_path_system(f2.topology, comm, cache=False)
+    _assert_equivalent(ps2, full)

@@ -11,6 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import DD_CATALOG, degree_diameter_graph, jellyfish_heterogeneous
+from repro.core.routing import clear_routing_cache, set_apsp_backend
 
 from .common import Timer, alpha_of, csv_row, save, spread_servers
 
@@ -59,7 +60,30 @@ def run() -> list[str]:
     claim = min(r["fraction"] for r in rows if r["deg"] >= CLAIM_MIN_DEGREE
                 or r["graph"] == "petersen")
     out.append(csv_row("fig2_claim_min_fraction", 0.0, f"{claim:.3f}(>=0.86)"))
-    save("fig2_degree_diameter", {"rows": rows, "claim_min_fraction": claim})
+
+    # APSP backend parity: rerun one case with the tiled min-plus kernel
+    # driver forced (what REPRO_APSP_BACKEND=minplus_blocked selects), so the
+    # TPU production path is exercised deterministically on CPU per run.
+    name, sps = CASES[0]
+    _, n, deg, _ = DD_CATALOG[name]
+    ports = deg + sps
+    prev = set_apsp_backend("minplus_blocked")
+    clear_routing_cache()
+    try:
+        a_kernel = alpha_of(degree_diameter_graph(name, k_ports=ports), seed=0)
+    finally:
+        set_apsp_backend(prev)
+        clear_routing_cache()
+    a_default = alpha_of(degree_diameter_graph(name, k_ports=ports), seed=0)
+    apsp_absdiff = abs(a_kernel - a_default)
+    out.append(
+        csv_row("fig2_apsp_backend_parity", 0.0,
+                f"|alpha_minplus_blocked-alpha_default|={apsp_absdiff:.2e}")
+    )
+    save("fig2_degree_diameter", {
+        "rows": rows, "claim_min_fraction": claim,
+        "apsp_backend_parity_absdiff": apsp_absdiff,
+    })
     return out
 
 

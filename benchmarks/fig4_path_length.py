@@ -14,24 +14,32 @@ from repro.core import (
     jellyfish,
     path_stats,
 )
+from repro.core.metrics import BLOCKED_STATS_MIN_N
 
 from .common import FULL, Timer, csv_row, save
 
 
 def run() -> list[str]:
     out, rows = [], []
-    sizes = (200, 800, 1600, 3200) if FULL else (200, 800, 1600)
+    # sizes >= BLOCKED_STATS_MIN_N run the blocked int16 APSP (2 bytes/pair
+    # of distance state) — that is what admits the 6400-switch point, beyond
+    # the paper's largest quoted experiment, on the same hardware
+    sizes = (200, 800, 1600, 3200, 6400) if FULL else (200, 800, 1600)
     for n in sizes:
+        blocked = n >= BLOCKED_STATS_MIN_N
         with Timer() as t:
             st = path_stats(jellyfish(n, 48, 36, seed=0))
         rows.append(
             {"n": n, "mean": st.mean, "diameter": st.diameter,
              "p9999": st.p9999, "bollobas_diam_bound":
-             bollobas_diameter_bound(n, 36), "seconds": round(t.dt, 2)}
+             bollobas_diameter_bound(n, 36), "seconds": round(t.dt, 2),
+             "apsp": "blocked-int16" if blocked else "dense-f32",
+             "dist_state_bytes": n * n * (2 if blocked else 4)}
         )
         out.append(
             csv_row(f"fig4_rrg{n}", t.dt * 1e6,
-                    f"mean={st.mean:.3f};diam={st.diameter:.0f}")
+                    f"mean={st.mean:.3f};diam={st.diameter:.0f}"
+                    + (";blocked" if blocked else ""))
         )
     # fat-tree reference: ToR-to-ToR paths (the paper's Fig 4 metric; the
     # all-switch mean is diluted by agg/core switches sitting mid-path)

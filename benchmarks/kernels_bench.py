@@ -8,7 +8,10 @@ tiny interpret-mode validation timing."""
 
 from __future__ import annotations
 
+import os
+import resource
 import time
+import tracemalloc
 
 import numpy as np
 
@@ -18,8 +21,10 @@ import jax.numpy as jnp
 from repro.core import (
     add_switch,
     apsp_hops,
+    apsp_hops_blocked,
     build_path_system,
     extend_server_permutation,
+    hops_to_int16,
     jellyfish,
     lp_concurrent_flow,
     mw_concurrent_flow,
@@ -43,6 +48,31 @@ def _time(fn, warmup=1, iters=3):
     for _ in range(iters):
         fn()
     return (time.perf_counter() - t0) / iters
+
+
+def _ru_maxrss_mb() -> float:
+    """Process peak RSS in MiB (ru_maxrss is KiB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _timed_peak(fn):
+    """(result, seconds, tracemalloc-peak-bytes) over two calls of ``fn``.
+
+    Time and peak are measured in SEPARATE calls: tracemalloc hooks every
+    allocation and inflates numpy-heavy wall clock by 1.3-2x, which would
+    make these rows apples-to-oranges against the ``_time()``-measured rows
+    in this file.  tracemalloc sees numpy's array allocations, so the peak
+    is the per-call high water of the *distance state + temporaries* —
+    unlike ru_maxrss, which is a process-lifetime mark and never goes down.
+    """
+    t0 = time.perf_counter()
+    out = fn()
+    dt = time.perf_counter() - t0
+    tracemalloc.start()
+    fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, dt, peak
 
 
 def _delta_routing_chain(n0: int, k_ports: int, r_net: int, steps: int,
@@ -105,6 +135,45 @@ def run() -> list[str]:
         )
     )
     results["delta_routing_small"] = small
+
+    # blocked APSP: the scale-envelope row (tracked per PR by bench-smoke).
+    # Dense f32 BLAS BFS vs the blocked sparse/int16 BFS vs the tiled
+    # min-plus driver, with per-call tracemalloc peaks (the distance-state
+    # working set) and the process peak RSS for context.  Parity is asserted
+    # on exact hop counts — the acceptance contract of the blocked path.
+    n_apsp = 512 if SMOKE else 1024
+    atop = jellyfish(n_apsp, 24, 18, seed=3)
+    aadj = atop.adjacency()
+    apsp_hops_blocked(aadj[:64, :64])  # warm scipy import out of the timings
+    d_dense, t_dense, peak_dense = _timed_peak(lambda: apsp_hops(aadj))
+    d_blk, t_blk, peak_blk = _timed_peak(
+        lambda: apsp_hops_blocked(aadj, row_block=256)
+    )
+    d_mpb, t_mpb, peak_mpb = _timed_peak(
+        lambda: ops.apsp_minplus_blocked(aadj, bm=256, bn=256, bk=256)
+    )
+    parity = bool(
+        np.array_equal(hops_to_int16(d_dense), d_blk)
+        and np.array_equal(d_blk, d_mpb)
+    )
+    out.append(
+        csv_row(
+            f"apsp_blocked_{n_apsp}", t_blk * 1e6,
+            f"dense={t_dense*1e3:.0f}ms minplus_blk={t_mpb*1e3:.0f}ms "
+            f"peak={peak_blk/2**20:.0f}MiB(dense={peak_dense/2**20:.0f}) "
+            f"parity={'exact' if parity else 'BROKEN'}",
+        )
+    )
+    results["apsp_blocked"] = {
+        "n": n_apsp,
+        "dense_s": t_dense, "blocked_s": t_blk, "minplus_blocked_s": t_mpb,
+        "dense_peak_bytes": int(peak_dense),
+        "blocked_peak_bytes": int(peak_blk),
+        "minplus_blocked_peak_bytes": int(peak_mpb),
+        "ru_maxrss_mb": _ru_maxrss_mb(),
+        "parity_exact": parity,
+    }
+
     if not SMOKE:
         big = _delta_routing_chain(256, 24, 18, steps=12)
         out.append(
@@ -205,6 +274,35 @@ def run() -> list[str]:
             "n_paths": int(bps.n_paths), "alpha": float(bmw.alpha),
         }
 
+    if bool(int(os.environ.get("REPRO_BENCH_XL", "0"))):
+        # the blocked-APSP scale rung: RRG(8192, 48, 36) = 98k servers.
+        # Distance state is N^2 int16 (128 MiB) + one <= 256 MiB f32 shard
+        # tile; budget documented in ROADMAP.md (< 4 GiB resident for
+        # distance state; measured ~200 s / 1.45 GiB tracemalloc peak for
+        # the whole build on this box).
+        xl = jellyfish(8192, 48, 36, seed=0)
+        xcomm = random_permutation_traffic(xl, seed=1)
+
+        def _xl_build():
+            clear_routing_cache()  # each _timed_peak call must do full work
+            return build_path_system(xl, xcomm, k=8)
+
+        xps, t_xl, peak_xl = _timed_peak(_xl_build)
+        out.append(
+            csv_row(
+                "route_blocked_8192x48", t_xl * 1e6,
+                f"P={xps.n_paths} peak={peak_xl/2**30:.2f}GiB "
+                f"rss={_ru_maxrss_mb():.0f}MiB",
+            )
+        )
+        results["routing_8192x48"] = {
+            "build_s": t_xl, "n_paths": int(xps.n_paths),
+            "tracemalloc_peak_bytes": int(peak_xl),
+            "dist_state_bytes": int(8192 * 8192 * 2),
+            "ru_maxrss_mb": _ru_maxrss_mb(),
+        }
+        clear_routing_cache()
+
     # flow solvers: MW / MPTCP timed at RRG(512); the exact-LP oracle (and the
     # MW-vs-LP quality ratio) at RRG(128) — single-core HiGHS needs minutes
     # beyond ~10k path variables, which is exactly why MW is the scale solver.
@@ -216,6 +314,26 @@ def run() -> list[str]:
     t_mp = _time(lambda: mptcp_throughput(ps, iters=1500), warmup=1, iters=2)
     out.append(csv_row("path_system_build_512", t_ps.dt * 1e6, f"P={ps.n_paths}"))
     out.append(csv_row("mw_flow_400it_512", t_mw * 1e6, f"alpha={mw.alpha:.3f}"))
+    # adaptive iteration count: plateau early-stop + the alpha >= 1
+    # feasibility target the bisection driver uses — same budget, fewer burnt
+    # iterations on decided probes
+    mwa = mw_concurrent_flow(ps, iters=400, early_stop=True, target_alpha=1.0)
+    t_mwa = _time(
+        lambda: mw_concurrent_flow(ps, iters=400, early_stop=True,
+                                   target_alpha=1.0),
+        warmup=0, iters=2,
+    )
+    out.append(
+        csv_row(
+            "mw_flow_adaptive_512", t_mwa * 1e6,
+            f"alpha={mwa.alpha:.3f} iters={mwa.iters}/400 "
+            f"quality={mwa.alpha/max(mw.alpha,1e-12):.4f}",
+        )
+    )
+    results_mw_adaptive = {
+        "fixed_s": t_mw, "adaptive_s": t_mwa, "iters_used": int(mwa.iters),
+        "alpha_fixed": float(mw.alpha), "alpha_adaptive": float(mwa.alpha),
+    }
     out.append(csv_row("mptcp_1500it_512", t_mp * 1e6, ""))
 
     lt = jellyfish(128, 24, 18, seed=0)
@@ -229,6 +347,7 @@ def run() -> list[str]:
         "build_512_s": t_ps.dt, "mw_512_s": t_mw, "mptcp_512_s": t_mp,
         "n_paths_512": int(ps.n_paths),
         "lp_128_s": t_lp.dt, "mw_quality_128": lmw.alpha / lp.alpha,
+        "mw_adaptive": results_mw_adaptive,
     }
 
     # MW congestion backends: scatter/segment-sum vs dense-incidence kernel

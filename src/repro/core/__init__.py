@@ -25,13 +25,23 @@ from .flow import (
 )
 from .jellyfish import jellyfish, jellyfish_heterogeneous, rrg
 from .legup import CostModel, ExpansionStage, jellyfish_arc, legup_arc
-from .metrics import apsp_hops, bollobas_diameter_bound, path_stats, PathStats
+from .metrics import (
+    INT16_INF,
+    apsp_hops,
+    apsp_hops_blocked,
+    bollobas_diameter_bound,
+    hops_to_f32,
+    hops_to_int16,
+    path_stats,
+    PathStats,
+)
 from .mptcp import MptcpResult, mptcp_throughput
 from .placement import CablePlan, localized_jellyfish, plan_cables
 from .routing import (
     PathSystem,
     build_path_system,
     k_shortest_paths,
+    set_apsp_backend,
     update_path_system,
 )
 from .swdc import swdc_hex3d, swdc_ring, swdc_torus2d
@@ -60,13 +70,15 @@ __all__ = [
     "DD_CATALOG", "degree_diameter_graph",
     "ClosSpec", "build_clos",
     "CostModel", "ExpansionStage", "legup_arc", "jellyfish_arc",
-    "apsp_hops", "path_stats", "PathStats", "bollobas_diameter_bound",
+    "apsp_hops", "apsp_hops_blocked", "INT16_INF", "hops_to_int16",
+    "hops_to_f32", "path_stats", "PathStats", "bollobas_diameter_bound",
     "bollobas_bound", "spectral_lambda2", "spectral_lower_bound",
     "kernighan_lin_bisection", "normalized_bisection",
     "Commodities", "random_permutation_traffic", "all_to_all_traffic",
     "random_server_permutation", "extend_server_permutation",
     "permutation_commodities",
     "PathSystem", "build_path_system", "k_shortest_paths", "update_path_system",
+    "set_apsp_backend",
     "FlowResult", "mw_concurrent_flow", "lp_concurrent_flow",
     "lp_edge_concurrent_flow", "throughput",
     "MptcpResult", "mptcp_throughput",

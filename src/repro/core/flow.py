@@ -133,18 +133,26 @@ def _resolve_backend(backend: str, n_paths: int, n_slots: int) -> str:
 # --------------------------------------------------------------------------- #
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "backend"))
-def _mw_solve(
+@functools.partial(jax.jit, static_argnames=("iters_total", "n_steps", "backend"))
+def _mw_window(
     path_edges: jnp.ndarray,  # (P, L) int32 padded with S (= n_slots)
     owner: jnp.ndarray,  # (P,) int32
     demands: jnp.ndarray,  # (K,) f32
     inv_cap: jnp.ndarray,  # (S,) f32  (1 / capacity per directed slot)
-    x_init: jnp.ndarray,  # (P,) f32 initial per-path split (pre-normalization)
-    n_comm: int,
-    iters: int,
+    carry,  # (x, rel_prev, best_alpha, best_x) — see _mw_carry_init
+    t0,  # first global iteration index of this window (traced scalar)
+    iters_total: int,  # anneal horizon (the FULL budget, not the window)
+    n_steps: int,
     backend: str = "scatter",
 ):
-    P, L = path_edges.shape
+    """``n_steps`` MW iterations starting at global step ``t0``.
+
+    The temperature anneal is driven by the *global* step over the full
+    ``iters_total`` horizon, so chaining windows reproduces the single-scan
+    trajectory exactly — which is what lets ``mw_concurrent_flow`` check the
+    best-alpha plateau between windows (adaptive iteration count) without
+    perturbing the converged-run result.
+    """
     S = inv_cap.shape[0]
     K = demands.shape[0]
     fused = make_congestion_fn(path_edges, S, backend)
@@ -152,8 +160,6 @@ def _mw_solve(
     def seg_norm(x):
         s = jnp.zeros((K,), jnp.float32).at[owner].add(x)
         return x / s[owner]
-
-    x0 = seg_norm(x_init)
 
     def body(carry, t):
         x, rel_prev, best_alpha, best_x = carry
@@ -166,7 +172,7 @@ def _mw_solve(
         # 1/sqrt(t) step decay; the lagged recurrence measures ~0.98 of the
         # LP optimum at 400 iterations on RRG(128,24,18)
         # (benchmarks/kernels_bench.py mw_vs_lp_quality_128)
-        frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters)
+        frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters_total)
         tau = jnp.maximum(mx_prev, 1e-12) * frac
         w = jax.nn.softmax(rel_prev / tau)
         rates = x * demands[owner]
@@ -183,12 +189,23 @@ def _mw_solve(
         x = seg_norm(x * jnp.exp(-eta * g))
         return (x, rel, best_alpha, best_x), None
 
-    (x, rel, best_alpha, best_x), _ = jax.lax.scan(
-        body,
-        (x0, jnp.zeros((S,), jnp.float32), jnp.float32(0.0), x0),
-        jnp.arange(iters),
-    )
-    # one final exact evaluation of the last iterate
+    carry, _ = jax.lax.scan(body, carry, t0 + jnp.arange(n_steps))
+    return carry
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _mw_final(
+    path_edges: jnp.ndarray,
+    owner: jnp.ndarray,
+    demands: jnp.ndarray,
+    inv_cap: jnp.ndarray,
+    carry,
+    backend: str = "scatter",
+):
+    """One exact evaluation of the last iterate, then the best-iterate result."""
+    S = inv_cap.shape[0]
+    fused = make_congestion_fn(path_edges, S, backend)
+    x, _, best_alpha, best_x = carry
     rates = x * demands[owner]
     loads, _ = fused(rates, jnp.zeros((S,), jnp.float32))
     mx = jnp.max(loads * inv_cap)
@@ -198,6 +215,17 @@ def _mw_solve(
     best_x = jnp.where(better, x, best_x)
     best_rates = best_x * demands[owner] * jnp.minimum(best_alpha, 1.0)
     return best_alpha, best_rates, 1.0 / best_alpha
+
+
+@jax.jit
+def _mw_carry_init(
+    x_init: jnp.ndarray, owner: jnp.ndarray, inv_cap: jnp.ndarray,
+    demands: jnp.ndarray,
+):
+    K = demands.shape[0]
+    s = jnp.zeros((K,), jnp.float32).at[owner].add(x_init)
+    x0 = x_init / s[owner]
+    return (x0, jnp.zeros_like(inv_cap), jnp.float32(0.0), x0)
 
 
 def _warm_split(ps: PathSystem, warm: "FlowResult | np.ndarray") -> np.ndarray:
@@ -229,6 +257,11 @@ def mw_concurrent_flow(
     iters: int = 400,
     backend: str = "auto",
     warm: "FlowResult | np.ndarray | None" = None,
+    early_stop: bool = False,
+    check_every: int = 50,
+    rel_tol: float = 1e-3,
+    patience: int = 2,
+    target_alpha: float | None = None,
 ) -> FlowResult:
     """MW/mirror-descent max concurrent flow.
 
@@ -241,6 +274,17 @@ def mw_concurrent_flow(
     (set by ``routing.update_path_system``).  Warm-started solves reach a
     given alpha quality in substantially fewer iterations on small topology
     deltas, which is where the expansion/failure sweeps spend their time.
+
+    Adaptive iteration count: with ``early_stop=True`` the solve runs in
+    ``check_every``-iteration windows and stops once the best alpha has
+    improved by less than ``rel_tol`` (relative) for ``patience`` consecutive
+    windows — the anneal schedule stays pinned to the full ``iters`` horizon,
+    so a run that never plateaus is bit-identical to ``early_stop=False``.
+    ``target_alpha`` additionally stops as soon as the best (exactly
+    evaluated) alpha reaches it — the feasibility-probe mode that keeps the
+    ``max_servers_at_full_capacity`` bisection from burning the full budget
+    on clearly-feasible probes.  ``FlowResult.iters`` reports the iterations
+    actually run.
     """
     if ps.n_paths == 0:
         return FlowResult(0.0, np.zeros(0), np.inf, "mw", 0)
@@ -249,18 +293,41 @@ def mw_concurrent_flow(
         x_init = _warm_split(ps, warm)
     else:
         x_init = np.ones(ps.n_paths, dtype=np.float32)
-    alpha, rates, max_load = _mw_solve(
-        jnp.asarray(ps.path_edges),
-        jnp.asarray(ps.path_owner),
-        jnp.asarray(ps.demands, dtype=jnp.float32),
-        jnp.asarray(1.0 / ps.capacities, dtype=jnp.float32),
-        jnp.asarray(x_init, dtype=jnp.float32),
-        ps.n_commodities,
-        iters,
-        backend,
+    pe = jnp.asarray(ps.path_edges)
+    owner = jnp.asarray(ps.path_owner)
+    demands = jnp.asarray(ps.demands, dtype=jnp.float32)
+    inv_cap = jnp.asarray(1.0 / ps.capacities, dtype=jnp.float32)
+    carry = _mw_carry_init(
+        jnp.asarray(x_init, dtype=jnp.float32), owner, inv_cap, demands
     )
+    adaptive = early_stop or target_alpha is not None
+    if not adaptive:
+        carry = _mw_window(pe, owner, demands, inv_cap, carry, 0, iters, iters,
+                           backend)
+        done = iters
+    else:
+        done = 0
+        best_prev = 0.0
+        stall = 0
+        while done < iters:
+            step = min(check_every, iters - done)
+            carry = _mw_window(pe, owner, demands, inv_cap, carry, done, iters,
+                               step, backend)
+            done += step
+            best = float(carry[2])  # best alpha so far (exact evaluations)
+            if target_alpha is not None and best >= target_alpha:
+                break
+            if early_stop:
+                if best - best_prev < rel_tol * max(best, 1e-12):
+                    stall += 1
+                    if stall >= patience:
+                        break
+                else:
+                    stall = 0
+                best_prev = max(best, best_prev)
+    alpha, rates, max_load = _mw_final(pe, owner, demands, inv_cap, carry, backend)
     return FlowResult(
-        float(alpha), np.asarray(rates), float(max_load), f"mw-{backend}", iters
+        float(alpha), np.asarray(rates), float(max_load), f"mw-{backend}", done
     )
 
 

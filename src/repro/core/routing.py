@@ -39,6 +39,23 @@ per-topology cache (APSP matrix, padded neighbor table, edge-slot lookup) so
 sweeping traffic matrices over one topology — the paper's §4 methodology —
 pays for the distance computation once.
 
+Memory envelope (the 10k-switch rung)
+-------------------------------------
+Distance state is held in the **canonical int16 hop representation**
+(``metrics.INT16_INF`` sentinel) and produced by a *blocked* APSP — sharded
+sparse-BLAS BFS on CPU (``metrics.apsp_hops_blocked``), tiled min-plus
+powering through the Pallas kernel on TPU
+(``kernels.ops.apsp_minplus_blocked``); ``REPRO_APSP_BACKEND`` /
+``set_apsp_backend`` overrides the dispatch.  The enumerator no longer
+materializes the (N+1)^2 float ``dist_pad`` copy: commodity frontiers are
+processed in **dst-sharded row blocks**, each shard gathering only the
+distance rows it needs into a float32 tile bounded by
+``REPRO_ROUTE_TILE_BYTES`` (default 256 MiB).  The O(diam * N^3) walk-count
+table is likewise gated by size and replaced by batched row powers beyond
+it.  Net: RRG(8192, 48, 36) builds with < 0.5 GiB of resident distance
+state (int16 matrix + one tile) where the dense float path held ~3 N^2 * 4
+bytes plus a (diam+1) N^2 * 4-byte power table.
+
 Topology deltas (paper §4.2 expansion, §4.3 failures) are first-class:
 ``update_path_system(ps, top_old, top_new, comm)`` diffs the edge sets,
 repairs the cached APSP (bounded BFS-row recompute + Floyd-Warshall pivots
@@ -57,11 +74,20 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from collections import OrderedDict
 
 import numpy as np
 
-from .metrics import apsp_hops
+from .metrics import (
+    INT16_INF,
+    apsp_hops,
+    apsp_hops_blocked,
+    bollobas_diameter_bound,
+    hops_to_f32,
+    hops_to_int16,
+    sparse_adjacency,
+)
 from .topology import Topology, edge_delta, edge_fingerprint
 from .traffic import Commodities
 
@@ -71,6 +97,8 @@ __all__ = [
     "build_path_system",
     "update_path_system",
     "clear_routing_cache",
+    "set_apsp_backend",
+    "APSP_BACKENDS",
 ]
 
 
@@ -108,24 +136,127 @@ def clear_routing_cache() -> None:
     _topo_cache.clear()
 
 
-def _apsp(adj: np.ndarray) -> np.ndarray:
-    """APSP dispatch: min-plus squaring kernel on TPU, BLAS frontier-BFS on CPU.
+# --------------------------------------------------------------------------- #
+# APSP backend dispatch
+# --------------------------------------------------------------------------- #
 
-    The min-plus Pallas kernel (``repro.kernels.minplus``) is the TPU-native
-    formulation; on CPU the dense BLAS BFS in ``core.metrics`` is faster than
-    interpreting the kernel, so it stays the host path.
+APSP_BACKENDS = ("auto", "dense", "blocked", "minplus", "minplus_blocked")
+
+#: Below this size the one-shot dense BLAS BFS beats the blocked/sparse
+#: machinery's per-block overhead; it is also the dense/sparse adjacency
+#: crossover for the slack-budget row powers.
+_BLOCKED_MIN_N = 1536
+
+#: Float32 working-tile budget for the sharded enumerator (distance-row
+#: tiles) and the slack-budget row-power chunks.
+_FRONTIER_TILE_BYTES = int(os.environ.get("REPRO_ROUTE_TILE_BYTES", 256 << 20))
+
+#: Full (diam+1, N, N) walk-count tables above this are replaced by batched
+#: row powers over just the query pairs (same budgets, no N^3 table).
+_WALK_TABLE_BYTES = 256 << 20
+
+
+# Platform probed ONCE, memoized on first use (re-probing
+# jax.default_backend() in a try/except per cache-miss call was both slow and
+# impossible to override in benchmarks).  Lazy rather than import-time so
+# `import repro.core` does not initialize the JAX backend as a side effect —
+# and so a process that configures JAX after importing us still resolves the
+# platform it actually configured.
+_APSP_PLATFORM: str | None = None
+
+
+def _apsp_platform() -> str:
+    global _APSP_PLATFORM
+    if _APSP_PLATFORM is None:
+        try:
+            import jax
+
+            _APSP_PLATFORM = jax.default_backend()
+        except Exception:  # pragma: no cover - jax always present here
+            _APSP_PLATFORM = "cpu"
+    return _APSP_PLATFORM
+
+
+_apsp_backend = os.environ.get("REPRO_APSP_BACKEND", "auto").strip().lower() or "auto"
+if _apsp_backend not in APSP_BACKENDS:
+    raise ValueError(
+        f"REPRO_APSP_BACKEND={_apsp_backend!r}: expected one of {APSP_BACKENDS}"
+    )
+
+
+def set_apsp_backend(name: str) -> str:
+    """Select the APSP backend; returns the previous setting.
+
+    ``auto`` resolves to the tiled min-plus kernel driver on TPU
+    (``kernels.ops.apsp_minplus_blocked``), the blocked sparse-BFS on CPU at
+    N >= ``_BLOCKED_MIN_N``, and the one-shot dense BLAS BFS below that.
+    The ``REPRO_APSP_BACKEND`` environment variable sets the initial value,
+    so CPU benchmarks/CI can exercise the blocked or kernel paths
+    deterministically.  Callers switching backends mid-process should also
+    ``clear_routing_cache()`` — cached distance matrices are not invalidated.
     """
-    try:
-        import jax
+    global _apsp_backend
+    if name not in APSP_BACKENDS:
+        raise ValueError(f"unknown APSP backend {name!r}: expected {APSP_BACKENDS}")
+    prev, _apsp_backend = _apsp_backend, name
+    return prev
 
-        on_tpu = jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover - jax always present in this image
-        on_tpu = False
-    if on_tpu:
-        from ..kernels import ops
 
-        return np.asarray(ops.apsp_minplus(adj)).astype(np.float32)
-    return apsp_hops(adj)
+def _diameter_hint(top: Topology) -> int | None:
+    """Diameter upper bound from (min degree, size) for the min-plus drivers.
+
+    Uses the Bollobás–de la Vega RRG bound, which holds w.h.p. rather than
+    certainly — the drivers therefore *certify* convergence (a single
+    fixed-point check) instead of trusting the hint; the hint's job is only
+    to replace the per-squaring host sync with one final one.
+    """
+    d = top.degrees()
+    if len(d) == 0:
+        return None
+    r = int(d.min())
+    if r < 3:
+        return None
+    bound = bollobas_diameter_bound(top.n_switches, r)
+    if not np.isfinite(bound):
+        return None
+    return int(bound) + 2
+
+
+def _apsp(adj: np.ndarray, diameter_hint: int | None = None) -> np.ndarray:
+    """APSP dispatch returning the **canonical int16 hop matrix**.
+
+    Every backend produces identical hop counts (``INT16_INF`` sentinel for
+    unreachable pairs); they differ only in platform and memory envelope —
+    see ``set_apsp_backend``.
+    """
+    be = _apsp_backend
+    n = adj.shape[0]
+    if be == "auto":
+        if _apsp_platform() == "tpu":
+            be = "minplus_blocked"
+        else:
+            be = "blocked" if n >= _BLOCKED_MIN_N else "dense"
+    if be == "dense":
+        return hops_to_int16(apsp_hops(adj))
+    if be == "blocked":
+        return apsp_hops_blocked(adj)
+    from ..kernels import ops
+
+    if be == "minplus":
+        return hops_to_int16(
+            np.asarray(ops.apsp_minplus(adj, diameter_hint=diameter_hint))
+        )
+    return ops.apsp_minplus_blocked(adj, diameter_hint=diameter_hint)
+
+
+def _finite_dist_max(dist: np.ndarray) -> int:
+    """Largest finite hop count in a canonical int16 / float hop matrix (-1
+    when every pair is unreachable or the matrix is empty)."""
+    if dist.dtype == np.int16:
+        finite = dist[dist != INT16_INF]
+        return int(finite.max()) if finite.size else -1
+    finite = dist[np.isfinite(dist)]
+    return int(finite.max()) if finite.size else -1
 
 
 def _cached_adj(top: Topology, entry: dict) -> np.ndarray:
@@ -134,25 +265,23 @@ def _cached_adj(top: Topology, entry: dict) -> np.ndarray:
     return entry["adj"]
 
 
+def _slack_adj(top: Topology, entry: dict):
+    """Adjacency operand for the slack-budget row powers: dense below the
+    sparse crossover, CSR above it (one frontier step costs O(E * rows)
+    instead of O(N^2 * rows))."""
+    if top.n_switches < _BLOCKED_MIN_N:
+        return _cached_adj(top, entry)
+    if "adj_sp" not in entry:
+        entry["adj_sp"] = sparse_adjacency(_cached_adj(top, entry))
+    return entry["adj_sp"]
+
+
 def _cached_dist(top: Topology, entry: dict) -> np.ndarray:
     if "dist" not in entry:
-        entry["dist"] = _apsp(_cached_adj(top, entry))
+        entry["dist"] = _apsp(
+            _cached_adj(top, entry), diameter_hint=_diameter_hint(top)
+        )
     return entry["dist"]
-
-
-def _cached_dist_pad(top: Topology, entry: dict, dist: np.ndarray) -> np.ndarray:
-    """(N+1, N+1) copy of ``dist`` with an +inf sentinel row/column.
-
-    Lets the enumerator gather distances for padded neighbor candidates
-    (sentinel id N) without masking, and — ``dist`` being symmetric — gather
-    ``dist_pad[t, cands]`` along contiguous rows for cache locality.
-    """
-    if "dist_pad" not in entry:
-        n = top.n_switches
-        dp = np.full((n + 1, n + 1), np.inf, dtype=np.float32)
-        dp[:n, :n] = dist
-        entry["dist_pad"] = dp
-    return entry["dist_pad"]
 
 
 def _cached_nbr(top: Topology, entry: dict) -> np.ndarray:
@@ -187,8 +316,7 @@ def _cached_walk_counts(top: Topology, entry: dict, dist: np.ndarray) -> np.ndar
     clipped to dodge f32 overflow; only the comparison against k matters.
     """
     if "walk_counts" not in entry:
-        finite = np.isfinite(dist)
-        lmax = int(dist[finite].max()) + 1 if finite.any() else 1
+        lmax = max(_finite_dist_max(dist) + 1, 1)
         a = top.adjacency(dtype=np.float32)
         powers = np.empty((lmax, *a.shape), dtype=np.float32)
         w = a
@@ -279,9 +407,10 @@ def _cap_per_pair(pids: np.ndarray, cap: int) -> np.ndarray:
 
 def _batched_round(
     nbr: np.ndarray,
-    dist_pad: np.ndarray,  # (N+1, N+1) symmetric hop distances, inf sentinel
+    dist_rows: np.ndarray,  # (R, N+1) f32 tile: the dst rows this shard needs
     src: np.ndarray,
     dst: np.ndarray,
+    dst_row: np.ndarray,  # (Q,) row of each pair's dst within dist_rows
     budget: np.ndarray,
     k: int,
     max_enum: int,
@@ -293,6 +422,12 @@ def _batched_round(
     prefixes of L hops, across every pair, as flat arrays.  Paths therefore
     complete in non-decreasing length order and each pair stops contributing
     frontier rows once it has k completed paths.
+
+    ``dist_rows`` is a sharded distance tile rather than the full matrix:
+    row ``dst_row[i]`` holds hop distances *from pair i's destination*
+    (distances are symmetric) over all N nodes plus a trailing +inf column
+    that the padded neighbor sentinel (id N) gathers, so a shard only ever
+    touches the rows its own destinations need.
 
     ``check_simple=False`` skips the explicit repeated-vertex prune.  It is
     exact whenever ``budget <= base + 1``: a prefix that repeats a vertex has
@@ -318,14 +453,15 @@ def _batched_round(
     pid, node, pref, plen = pid[live], node[live], pref[live], plen[live]
 
     while len(pid):
-        cand = nbr[node]  # (M, d_max), padded with n (dist_pad sentinel)
+        cand = nbr[node]  # (M, d_max), padded with n (tile sentinel column)
         dst_b = dst[pid]
         # admissibility: hops so far = plen - 1; stepping to cand makes plen
         # hops; completing through cand needs plen + dist(cand, dst) <= budget.
-        # dist_pad is symmetric, so index [dst, cand] for row-contiguous reads;
-        # the sentinel candidate gathers +inf and prunes itself.
+        # distances are symmetric, so the shard tile stores dst rows and we
+        # index [dst_row, cand] for row-contiguous reads; the sentinel
+        # candidate gathers the tile's +inf column and prunes itself.
         rem = (budget[pid] - plen).astype(np.float32)
-        ok = dist_pad[dst_b[:, None], cand] <= rem[:, None]
+        ok = dist_rows[dst_row[pid][:, None], cand] <= rem[:, None]
         if check_simple:
             # simplicity: candidate must not already be on the prefix
             ok &= ~(pref[:, :, None] == cand[:, None, :]).any(axis=1)
@@ -356,8 +492,15 @@ def _batched_round(
     return out
 
 
+def _adj_rows_f32(adj, rows: np.ndarray) -> np.ndarray:
+    """Dense f32 gather of adjacency rows from a dense or CSR operand."""
+    if hasattr(adj, "tocsr"):  # scipy sparse (array or matrix)
+        return np.asarray(adj[rows].todense(), dtype=np.float32)
+    return adj[rows].astype(np.float32)
+
+
 def _subset_slack(
-    adj: np.ndarray,
+    adj,
     dist: np.ndarray,
     src: np.ndarray,
     dst: np.ndarray,
@@ -368,12 +511,31 @@ def _subset_slack(
     Same decision rule as ``_cached_walk_counts`` (w_d >= k -> slack 0,
     w_d + w_{d+1} >= k -> 1, else 2) but computed as batched row powers
     ``R_{L+1} = R_L @ A`` over only the |pairs| source rows — O(q * N * diam)
-    instead of the O(diam * N^3) full-power table, which is the right trade
-    for the small re-enumeration subsets of ``update_path_system``.
+    against a CSR adjacency instead of the O(diam * N^3) full-power table.
+    Queries are processed in row chunks so the dense (chunk, N) power state
+    respects the frontier tile budget; this is both the delta path's variant
+    (small re-enumeration subsets) and the full-build path at sizes where the
+    power table no longer fits.
     """
     q = len(src)
     slack = np.zeros(q, dtype=np.int64)
-    base = dist[src, dst]
+    if not q:
+        return slack
+    n = dist.shape[0]
+    # two (chunk, N) f32 arrays live during a power step
+    chunk = max(256, _FRONTIER_TILE_BYTES // max(8 * n, 1))
+    for lo in range(0, q, chunk):
+        sl = slice(lo, min(lo + chunk, q))
+        slack[sl] = _subset_slack_block(adj, dist, src[sl], dst[sl], k)
+    return slack
+
+
+def _subset_slack_block(
+    adj, dist: np.ndarray, src: np.ndarray, dst: np.ndarray, k: int
+) -> np.ndarray:
+    q = len(src)
+    slack = np.zeros(q, dtype=np.int64)
+    base = hops_to_f32(dist[src, dst])
     pos = np.isfinite(base) & (base >= 1)
     if not pos.any():
         return slack
@@ -381,7 +543,7 @@ def _subset_slack(
     dmax = int(d[pos].max())
     w_d = np.zeros(q, dtype=np.float32)
     w_d1 = np.zeros(q, dtype=np.float32)
-    r = adj[src].astype(np.float32)  # (q, N) length-1 walk counts per source
+    r = _adj_rows_f32(adj, src)  # (q, N) length-1 walk counts per source
     for length in range(1, dmax + 2):
         hit_d = pos & (d == length)
         if hit_d.any():
@@ -390,17 +552,54 @@ def _subset_slack(
         if hit_d1.any():
             w_d1[hit_d1] = r[hit_d1, dst[hit_d1]]
         if length <= dmax:
-            r = np.minimum(r @ adj, np.float32(2 ** 20))
+            r = np.minimum(np.asarray(r @ adj), np.float32(2 ** 20))
     slack[pos] = np.where(
         w_d[pos] >= k, 0, np.where(w_d[pos] + w_d1[pos] >= k, 1, 2)
     )
     return slack
 
 
+def _shard_by_dst(
+    sel: np.ndarray, dst: np.ndarray, rows_cap: int, pairs_cap: int
+) -> list:
+    """Split ``sel`` into dst-sorted shards of <= ``rows_cap`` distinct dsts
+    AND <= ``pairs_cap`` pairs.
+
+    Sorting by destination makes each shard's distance tile a compact gather
+    of exactly the rows it touches, which is what bounds the enumerator's
+    float working set to one tile instead of the full (N+1)^2 matrix.  The
+    pair cap bounds the *frontier* working set the same way — per-level
+    candidate/prefix temporaries scale with the number of pairs expanding
+    together, and at 10k-switch scale an uncapped shard would hold every
+    commodity at once.
+    """
+    if not len(sel):
+        return []
+    order = np.argsort(dst[sel], kind="stable")
+    s = sel[order]
+    d = dst[s]
+    distinct = np.cumsum(np.r_[True, d[1:] != d[:-1]]) - 1
+    row_grp = distinct // rows_cap
+    pair_grp = np.arange(len(s)) // pairs_cap
+    change = np.r_[
+        True, (row_grp[1:] != row_grp[:-1]) | (pair_grp[1:] != pair_grp[:-1])
+    ]
+    bounds = np.flatnonzero(change)
+    return [s[b:e] for b, e in zip(bounds, np.r_[bounds[1:], len(s)])]
+
+
+def _dist_tile(dist: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    """(len(rows), N+1) f32 gather of distance rows + the +inf sentinel col."""
+    n = dist.shape[0]
+    tile = np.empty((len(rows), n + 1), dtype=np.float32)
+    tile[:, :n] = hops_to_f32(dist[rows])
+    tile[:, n] = np.inf
+    return tile
+
+
 def _k_shortest_unique(
     nbr: np.ndarray,
     dist: np.ndarray,
-    dist_pad: np.ndarray,
     src: np.ndarray,
     dst: np.ndarray,
     k: int,
@@ -419,14 +618,28 @@ def _k_shortest_unique(
     majority on low-diameter random graphs), those are enumerated once at
     that budget, and only the rare stragglers iterate.  ``slack_init``
     (from ``_subset_slack``) supplies the same per-pair budgets without the
-    O(diam * N^3) walk-count table — the delta path's variant.
+    O(diam * N^3) walk-count table — the delta path's variant and the
+    at-scale default.
+
+    Pairs are processed in **dst-sharded row blocks** (``_shard_by_dst``):
+    each shard gathers only its destinations' distance rows into an f32 tile
+    bounded by ``_FRONTIER_TILE_BYTES``, so ``dist`` can stay in the 2-byte
+    canonical form and no (N+1)^2 float copy ever exists.  Shards partition
+    the pair set, and per-pair results are independent of sharding, so the
+    returned path sets are identical to the unsharded enumeration.
     """
     Q = len(src)
     results: list[list[list[int]]] = [[] for _ in range(Q)]
-    base = dist[src, dst]
+    base = hops_to_f32(dist[src, dst])
     active = np.flatnonzero(np.isfinite(base))
     if len(active) == 0:
         return results
+    n = dist.shape[0]
+    rows_cap = max(1, _FRONTIER_TILE_BYTES // (4 * (n + 1)))
+    # frontier temporaries measure ~65 KiB per expanding pair on the paper's
+    # degree-36 graphs (diameter 4); budget each shard against that rate so
+    # the knob really caps the frontier working set, not just the tile
+    pairs_cap = max(256, _FRONTIER_TILE_BYTES // (64 << 10))
 
     if slack_init is not None:
         slack = np.minimum(slack_init, max_slack)
@@ -455,16 +668,19 @@ def _k_shortest_unique(
             lo = slack[active] <= 1
             buckets = [(True, active[lo]), (False, active[~lo])]
         for lo_slack, sel in buckets:
-            if not len(sel):
-                continue
-            found = _batched_round(
-                nbr, dist_pad, src[sel], dst[sel], base[sel] + slack[sel],
-                k, max_enum, check_simple=not lo_slack,
-            )
-            for j, q in enumerate(sel):
-                results[q] = found[j]
-                if len(found[j]) < k and slack[q] < max_slack:
-                    still.append(q)
+            for sh in _shard_by_dst(sel, dst, rows_cap, pairs_cap):
+                rows = np.unique(dst[sh])  # sorted — searchsorted below
+                tile = _dist_tile(dist, rows)
+                dst_row = np.searchsorted(rows, dst[sh])
+                found = _batched_round(
+                    nbr, tile, src[sh], dst[sh], dst_row,
+                    base[sh] + slack[sh], k, max_enum,
+                    check_simple=not lo_slack,
+                )
+                for j, q in enumerate(sh):
+                    results[q] = found[j]
+                    if len(found[j]) < k and slack[q] < max_slack:
+                        still.append(q)
         active = np.asarray(sorted(still), dtype=np.int64)
         slack[active] += 1
     return results
@@ -536,19 +752,26 @@ def k_shortest_paths(
     ``max_enum`` bounds the per-pair frontier width per expansion level.
     ``use_counts`` selects the slack-budget precompute: ``True`` builds (and
     caches) the full O(diam * N^3) walk-count table — right when sweeping
-    many traffic matrices over one topology; ``"subset"`` computes budgets
-    for just the query pairs via batched row powers — right for the small
-    re-enumeration sets of ``update_path_system``; ``False`` skips budgets
-    and iterates every pair's slack from 0.  The returned path sets are
-    identical either way (budgets are purely a cost knob).
+    many traffic matrices over one topology, and silently degraded to the
+    ``"subset"`` row powers once the table would exceed ``_WALK_TABLE_BYTES``
+    (the budgets, and hence the path sets, are identical); ``"subset"``
+    computes budgets for just the query pairs via batched row powers — right
+    for the small re-enumeration sets of ``update_path_system``; ``False``
+    skips budgets and iterates every pair's slack from 0.  The returned path
+    sets are identical in every mode (budgets are purely a cost knob).
+
+    ``dist`` may be a float hop matrix or the canonical int16 form; the
+    enumerator gathers per-shard f32 distance tiles either way (see
+    ``_k_shortest_unique``) and never materializes a padded float copy.
     """
     if not len(pairs):
         return []
     arr = np.asarray(pairs, dtype=np.int64).reshape(len(pairs), 2)
     entry = _topo_entry(top, cache=cache)
-    explicit_dist = dist is not None
     if dist is None:
         dist = _cached_dist(top, entry)
+    else:
+        dist = np.asarray(dist)
     nbr = _cached_nbr(top, entry)
 
     n = top.n_switches
@@ -556,25 +779,23 @@ def k_shortest_paths(
     hi = np.maximum(arr[:, 0], arr[:, 1])
     keys, inv = np.unique(lo * n + hi, return_inverse=True)
     # for k <= 1 the slack assignment is always 0 (any finite pair has >= 1
-    # shortest path), so skip the O(diam * N^3) walk-count precompute
-    counts = (
-        _cached_walk_counts(top, entry, dist)
-        if use_counts is True and max_slack >= 1 and k > 1
-        else None
-    )
-    slack_init = (
-        _subset_slack(_cached_adj(top, entry), dist, keys // n, keys % n, k)
-        if use_counts == "subset" and max_slack >= 1 and k > 1
-        else None
-    )
-    if explicit_dist:  # caller-provided APSP: pad it rather than reuse cache
-        n_ = top.n_switches
-        dist_pad = np.full((n_ + 1, n_ + 1), np.inf, dtype=np.float32)
-        dist_pad[:n_, :n_] = dist
-    else:
-        dist_pad = _cached_dist_pad(top, entry, dist)
+    # shortest path), so skip the slack precompute entirely
+    counts = None
+    slack_init = None
+    if max_slack >= 1 and k > 1:
+        mode = use_counts
+        if mode is True:
+            lmax = max(_finite_dist_max(dist) + 1, 1)
+            if lmax * n * n * 4 > _WALK_TABLE_BYTES:
+                mode = "subset"  # same budgets, no O(diam * N^3) table
+        if mode is True:
+            counts = _cached_walk_counts(top, entry, dist)
+        elif mode == "subset":
+            slack_init = _subset_slack(
+                _slack_adj(top, entry), dist, keys // n, keys % n, k
+            )
     uniq = _k_shortest_unique(
-        nbr, dist, dist_pad, keys // n, keys % n, k, max_slack, max_enum,
+        nbr, dist, keys // n, keys % n, k, max_slack, max_enum,
         counts=counts, slack_init=slack_init,
     )
     out: list[list[list[int]]] = []
@@ -734,21 +955,25 @@ def build_path_system(
 # --------------------------------------------------------------------------- #
 
 
-def _bfs_rows(adj: np.ndarray, rows: np.ndarray) -> np.ndarray:
+def _bfs_rows(adj, rows: np.ndarray) -> np.ndarray:
     """Hop distances from each source in ``rows`` (batched BLAS frontier BFS).
 
     The rectangular sibling of ``metrics.apsp_hops``: (len(rows), N) instead
     of (N, N), so repairing a handful of APSP rows after a topology delta
-    costs |rows| / N of a full recompute.
+    costs |rows| / N of a full recompute.  ``adj`` may be dense or CSR (the
+    frontier product is a dense ndarray either way).
     """
     m, n = len(rows), adj.shape[0]
-    a = (adj != 0).astype(np.float32)
+    if hasattr(adj, "tocsr"):
+        a = adj
+    else:
+        a = (adj != 0).astype(np.float32)
     dist = np.full((m, n), np.inf, dtype=np.float32)
     dist[np.arange(m), rows] = 0.0
     reach = np.zeros((m, n), dtype=np.float32)
     reach[np.arange(m), rows] = 1.0
     for step in range(1, n + 1):
-        newly = ((reach @ a) > 0) & ~np.isfinite(dist)
+        newly = (np.asarray(reach @ a) > 0) & ~np.isfinite(dist)
         if not newly.any():
             break
         dist[newly] = step
@@ -767,18 +992,34 @@ def _dist_is_exact(d: np.ndarray, nbr: np.ndarray) -> bool:
     into *construct optimistically, verify, recompute only on failure* —
     removals rarely shift distances on a low-diameter random graph, so the
     fallback is the exception.
+
+    Accepts the canonical int16 hop matrix (sentinel ``INT16_INF``, verified
+    in int32 so the sentinel + 1 gather-min cannot wrap) as well as float32
+    with +inf — whichever form the blocked/dense APSP backends produced.
     """
     n = d.shape[0]
     if not (d.diagonal() == 0).all():
         return False
-    dpad = np.concatenate([d, np.full((n, 1), np.inf, dtype=np.float32)], axis=1)
+    is_i16 = d.dtype == np.int16
+    if is_i16:
+        pad_val, inf32 = INT16_INF, np.int32(INT16_INF)
+        dpad = np.concatenate([d, np.full((n, 1), pad_val, dtype=np.int16)], axis=1)
+    else:
+        dpad = np.concatenate([d, np.full((n, 1), np.inf, dtype=np.float32)], axis=1)
     # chunk the gather to bound the (rows, chunk, d_max) temporary
     step = max(1, (1 << 22) // max(n * nbr.shape[1], 1))
     for lo in range(0, n, step):
         cols = nbr[lo: lo + step]  # (c, d_max) neighbor lists of chunk nodes
-        best = dpad[:, cols].min(axis=2) + 1.0  # (n, c)
-        want = d[:, lo: lo + step]
-        eq = best == want
+        if is_i16:
+            best = dpad[:, cols].min(axis=2).astype(np.int32) + 1  # (n, c)
+            want = d[:, lo: lo + step].astype(np.int32)
+            # "unreachable" satisfies the recurrence when every neighbor is
+            # unreachable too: best = sentinel + 1, want = sentinel
+            eq = (best == want) | ((want == inf32) & (best > inf32))
+        else:
+            best = dpad[:, cols].min(axis=2) + 1.0
+            want = d[:, lo: lo + step]
+            eq = best == want
         ar = np.arange(lo, min(lo + step, n))
         eq[ar, ar - lo] = True  # diagonal handled above
         if not eq.all():
@@ -793,6 +1034,7 @@ def _repair_dist(
     kept_new: np.ndarray,
     rows: np.ndarray,
     added: np.ndarray,
+    adj=None,
 ) -> np.ndarray:
     """Candidate APSP for ``top_new`` from ``dist_old`` plus a bounded repair.
 
@@ -810,12 +1052,17 @@ def _repair_dist(
     surviving rows; callers certify with ``_dist_is_exact`` and fall back to
     a full ``_apsp`` when the check fails, so the construction here only has
     to be right in the common case, never in all cases.
+
+    ``dist_old`` may be canonical int16 or float32; the repair workspace is a
+    transient float32 matrix (the FW pivots need +inf arithmetic) and the
+    result is returned in the canonical int16 form.
     """
     n = top_new.n_switches
     d = np.full((n, n), np.inf, dtype=np.float32)
-    d[np.ix_(kept_new, kept_new)] = dist_old[np.ix_(kept_old, kept_old)]
+    d[np.ix_(kept_new, kept_new)] = hops_to_f32(dist_old[np.ix_(kept_old, kept_old)])
     np.fill_diagonal(d, 0.0)
-    adj = top_new.adjacency()
+    if adj is None:
+        adj = top_new.adjacency()
     if len(rows):
         sub = _bfs_rows(adj, rows)
         d[rows, :] = sub
@@ -826,7 +1073,7 @@ def _repair_dist(
         d[av, au] = d[au, av]
         for w in np.unique(added):
             np.minimum(d, d[:, w, None] + d[w, None, :], out=d)
-    return d
+    return hops_to_int16(d)
 
 
 def _resolve_node_map(
@@ -927,7 +1174,9 @@ def update_path_system(
     if dist_old is None:
         # No cached predecessor APSP: recompute it (still far cheaper than a
         # full rebuild, which would also redo walk counts and enumeration).
-        dist_old = _apsp(top_old.adjacency())
+        dist_old = _apsp(top_old.adjacency(), diameter_hint=_diameter_hint(top_old))
+    else:
+        dist_old = np.asarray(dist_old)  # canonical int16 or caller float
 
     entry_new = _topo_entry(top_new, cache=cache)
     nbr_new = _cached_nbr(top_new, entry_new)
@@ -936,7 +1185,9 @@ def update_path_system(
     elif n_new < 384:
         # below a few hundred switches the dense BLAS APSP is cheaper than
         # candidate construction + certification — just recompute
-        dist_new = _apsp(_cached_adj(top_new, entry_new))
+        dist_new = _apsp(
+            _cached_adj(top_new, entry_new), diameter_hint=_diameter_hint(top_new)
+        )
         entry_new["dist"] = dist_new
     else:
         kept_old = np.flatnonzero(nm >= 0)
@@ -947,11 +1198,17 @@ def update_path_system(
         new_nodes = np.setdiff1d(np.arange(n_new, dtype=np.int64), kept_new)
         removed_ends = nm[np.unique(top_old.edges[removed_mask])]
         rows = np.union1d(removed_ends[removed_ends >= 0], new_nodes)
-        cand = _repair_dist(dist_old, top_new, kept_old, kept_new, rows, added)
+        cand = _repair_dist(
+            dist_old, top_new, kept_old, kept_new, rows, added,
+            adj=_slack_adj(top_new, entry_new),
+        )
         if _dist_is_exact(cand, nbr_new):
             dist_new = cand
         else:  # a removal shifted distances between surviving rows
-            dist_new = _apsp(_cached_adj(top_new, entry_new))
+            dist_new = _apsp(
+                _cached_adj(top_new, entry_new),
+                diameter_hint=_diameter_hint(top_new),
+            )
         entry_new["dist"] = dist_new
 
     # ---- per-commodity reuse decision (vectorized) ----------------------- #
@@ -1010,12 +1267,16 @@ def update_path_system(
     # tie-length candidate can reshuffle the canonical tie selection — so
     # any admissible added-edge path at or under the budget forces a
     # re-enumeration.
-    d_pair_new = dist_new[src_n, dst_n]
+    d_pair_new = hops_to_f32(dist_new[src_n, dst_n])
     if len(added):
         au, av = added[:, 0], added[:, 1]
+        # np.ix_ gathers keep the temporaries at (K, |added|) instead of the
+        # (K, N) row gather the chained indexing used to materialize
         via_added = np.minimum(
-            dist_new[src_n][:, au] + dist_new[dst_n][:, av],
-            dist_new[src_n][:, av] + dist_new[dst_n][:, au],
+            hops_to_f32(dist_new[np.ix_(src_n, au)])
+            + hops_to_f32(dist_new[np.ix_(dst_n, av)]),
+            hops_to_f32(dist_new[np.ix_(src_n, av)])
+            + hops_to_f32(dist_new[np.ix_(dst_n, au)]),
         ).min(axis=1) + 1.0  # shortest path length through any added edge
     else:
         via_added = np.full(K, np.inf, dtype=np.float32)
@@ -1032,7 +1293,7 @@ def update_path_system(
     r_mi = mi[~unr_old]
     ci = old_kept_of[r_mi]
     ok = ~broken_kept[ci]
-    ok &= dist_old[ps.src[r_mi], ps.dst[r_mi]] == d_pair_new[r_js]
+    ok &= hops_to_f32(dist_old[ps.src[r_mi], ps.dst[r_mi]]) == d_pair_new[r_js]
     budget = np.where(
         cnt[ci] >= kk, maxlen[ci].astype(np.float64), d_pair_new[r_js] + ms
     )

@@ -6,6 +6,16 @@
 
 ``ops`` holds the jit'd dispatch wrappers (kernel on TPU, jnp oracle on CPU),
 ``ref`` the pure-jnp oracles used as ground truth in tests.
+
+Scale path: ``ops.apsp_minplus_blocked`` is the production APSP driver — it
+keeps the distance matrix host-resident in the canonical int16 hop
+representation (sentinel 32767 = unreachable) and streams (bm, bk) x (bk, bn)
+float32 tiles through the min-plus product (``minplus_pallas`` on TPU, a
+cache-blocked numpy reduction on CPU), so the float working set is a few
+tiles regardless of N.  That is what moves the routable envelope from
+RRG(~2k) to RRG(10k+)-class instances; ``repro.core.routing`` selects it via
+``REPRO_APSP_BACKEND`` / ``set_apsp_backend`` (CPU default is the blocked
+BFS in ``core.metrics``, same int16 contract).
 """
 
 from . import ops, ref

@@ -27,7 +27,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["minplus_pallas", "minplus_kernel"]
+__all__ = ["minplus_pallas", "minplus_kernel", "check_minplus_dtype"]
+
+
+def check_minplus_dtype(*arrays) -> tuple:
+    """Validate/upcast min-plus operand dtypes; raise early on unsupported.
+
+    The tropical product needs an additive identity (+inf) to pad partial
+    tiles, so integer and boolean operands cannot flow through the kernel —
+    padding them used to silently produce a cryptic downstream error (jnp.pad
+    with inf on an int array).  Integer/bool dtypes now raise a clear
+    ``ValueError`` at entry (convert hop counts with
+    ``repro.core.metrics.hops_to_f32`` first); half-precision floats are
+    upcast to float32 (the VPU reduction accumulates in f32 anyway).
+    """
+    out = []
+    for x in arrays:
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            raise ValueError(
+                f"min-plus operands must be floating point (got {x.dtype}): "
+                "inf-padding an integer tile is undefined; convert int16 hop "
+                "matrices with repro.core.metrics.hops_to_f32 first"
+            )
+        if x.dtype in (jnp.float16, jnp.bfloat16):
+            x = x.astype(jnp.float32)
+        out.append(x)
+    return tuple(out)
 
 
 def minplus_kernel(a_ref, b_ref, o_ref):
@@ -69,6 +95,7 @@ def minplus_pallas(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    a, b = check_minplus_dtype(a, b)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -25,11 +25,17 @@ size question, answered here by ``preferred_congestion_backend``:
   XLA's scatter-add is cache-friendly), so: ``scatter`` unless the instance
   is tiny.
 
-``apsp_minplus`` is the TPU-shaped APSP (min-plus squaring); CPU production
-code keeps the BLAS frontier-BFS in ``core.metrics``.
+``apsp_minplus`` is the TPU-shaped APSP (min-plus squaring, dense f32);
+``apsp_minplus_blocked`` is its out-of-core sibling — host-resident int16
+distance state, streamed f32 tiles — and the production path at 10k+
+switches.  CPU production code defaults to the blocked BLAS frontier-BFS in
+``core.metrics`` (same int16 contract); ``REPRO_APSP_BACKEND`` /
+``routing.set_apsp_backend`` overrides the choice deterministically.
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +50,15 @@ __all__ = [
     "matmul",
     "congestion",
     "apsp_minplus",
+    "apsp_minplus_blocked",
     "power_iteration_lambda2",
     "preferred_congestion_backend",
 ]
+
+# int16 "unreachable" sentinel of the canonical hop representation.  Equal by
+# construction to repro.core.metrics.INT16_INF (kernels cannot import core
+# without a cycle through core.flow).
+_INT16_INF = np.int16(np.iinfo(np.int16).max)
 
 
 def _on_tpu() -> bool:
@@ -103,43 +115,160 @@ def congestion(incidence, rates, prices, backend: str = "auto", **blocks):
     return congestion_pallas(incidence, rates, prices, **blocks)
 
 
+def _squarings_to_cover(cover: int) -> int:
+    """Number of min-plus squarings after which ``D^(2^t)`` spans ``cover`` hops."""
+    steps = 0
+    m = 1
+    while m < max(cover, 1):
+        m *= 2
+        steps += 1
+    return steps
+
+
 def apsp_minplus(
-    adj, backend: str = "auto", diameter_hint: int | None = None
+    adj,
+    backend: str = "auto",
+    diameter_hint: int | None = None,
+    certify: bool = True,
 ) -> jax.Array:
     """All-pairs hop distances by min-plus squaring of the adjacency.
 
-    ``D^(2t)`` converges once ``2^t >= diameter``, so with ``diameter_hint``
-    only ``ceil(log2(hint))`` squarings run; without it, squaring stops as
-    soon as a pass is a fixed point (low-diameter random graphs converge in
-    2-3 squarings — the n-1 worst-case bound would do 9+ at N=512 for
-    nothing).  The convergence check syncs host-side; pass a hint inside
-    fully-jitted pipelines.
+    ``D^(2t)`` converges once ``2^t >= diameter``.  Three sync regimes:
+
+    * ``diameter_hint`` given (eager): run ``ceil(log2(hint))`` squarings
+      with **no** per-squaring host sync, then — because callers plumb hints
+      from probabilistic degree/size bounds (Bollobás), not certified ones —
+      one final fixed-point check certifies the result; only an undershooting
+      hint pays further synced squarings.  ``certify=False`` skips even that
+      single sync for callers holding a certified bound.
+    * traced (inside an outer jit): trust the hint (or the n-1 worst case)
+      fully — no host sync is possible.
+    * no hint (eager): the historical path — squaring stops at the first
+      fixed point, one host sync per squaring (low-diameter random graphs
+      converge in 2-3 squarings; the n-1 bound would do 9+ at N=512).
     """
     n = adj.shape[0]
     d = jnp.where(jnp.asarray(adj) > 0, 1.0, jnp.inf)
     d = jnp.where(jnp.eye(n, dtype=bool), 0.0, d)
-    # the convergence check needs concrete values; under an outer jit fall
-    # back to the static worst-case squaring count (pass diameter_hint to
-    # bound it explicitly inside fully-jitted pipelines)
     traced = isinstance(d, jax.core.Tracer)
+    done = 0
     if diameter_hint is not None or traced:
         cover = diameter_hint if diameter_hint is not None else max(n - 1, 1)
-        steps = 0
-        m = 1
-        while m < max(cover, 1):
-            m *= 2
-            steps += 1
+        steps = _squarings_to_cover(cover)
         for _ in range(steps):
             d = minplus(d, d, backend=backend)
-        return d
-    m = 1
-    while m < max(n - 1, 1):
+        done = steps
+        if traced or not certify:
+            return d
+    # synced fixed-point loop: the full computation without a hint, or the
+    # single certify pass (plus rare continuation) after an uncertified hint
+    m = 1 << done
+    while True:
         new = minplus(d, d, backend=backend)
         m *= 2
         if bool(jnp.all(new == d)):  # fixed point: all distances found
             return new
         d = new
+        if m >= max(n - 1, 1):
+            return d
+
+
+def apsp_minplus_blocked(
+    adj,
+    bm: int = 512,
+    bn: int = 512,
+    bk: int = 512,
+    diameter_hint: int | None = None,
+    backend: str = "auto",
+    chunk: int = 16,
+) -> np.ndarray:
+    """Out-of-core APSP by **tiled** min-plus powering; canonical int16 out.
+
+    The distance matrix lives on the host in the canonical int16 hop
+    representation (sentinel ``_INT16_INF``); each squaring streams
+    ``(bm, bk) x (bk, bn)`` float32 tiles through the min-plus product —
+    the ``minplus_pallas`` kernel on TPU (``backend="pallas"`` forces it,
+    interpret mode off-TPU), a cache-blocked numpy broadcast reduction on
+    CPU.  Float working set: one ``(bm, N)`` row band (converted once per
+    output-row stripe) plus ``O(bk*bn + bm*bn + bm*chunk*bn)`` of tiles —
+    i.e. ``4*bm*N`` bytes dominate at large N.  Resident distance state: two
+    int16 matrices (current and next power), ``4 N^2`` bytes total at the
+    peak of a squaring versus the ``>= 12 N^2`` of the dense f32 path.
+
+    Because D is host-resident, the fixed-point check is a free host
+    ``array_equal`` (no device sync), so the driver always runs to a
+    *certified* fixed point (bounded by the ``n - 1`` worst case) — an
+    undershooting ``diameter_hint`` can never produce wrong distances here,
+    unlike a trusted hint would.  The hint is accepted for API symmetry with
+    ``apsp_minplus`` (where it replaces per-squaring device syncs); it does
+    not bound this driver.
+    """
+    a = np.asarray(adj)
+    n = a.shape[0]
+    if n >= int(_INT16_INF):
+        raise ValueError(
+            f"N = {n} >= int16 sentinel {int(_INT16_INF)}: distances could "
+            "overflow the canonical int16 hop representation"
+        )
+    d = np.full((n, n), _INT16_INF, dtype=np.int16)
+    d[a != 0] = 1
+    np.fill_diagonal(d, 0)
+    if n <= 1:
+        return d
+    use_kernel = backend == "pallas" or (
+        backend == "auto" and jax.default_backend() == "tpu"
+    )
+    del diameter_hint  # see docstring: the host fixed-point check certifies
+    max_sq = _squarings_to_cover(n - 1)
+    inf16 = int(_INT16_INF)
+    for _ in range(max(max_sq, 1)):
+        nxt = np.empty_like(d)
+        for i0 in range(0, n, bm):
+            a_band = _tiles_f32(d[i0 : i0 + bm])  # (bm, n) row band, once
+            for j0 in range(0, n, bn):
+                acc = np.full(
+                    (a_band.shape[0], min(bn, n - j0)), np.inf, dtype=np.float32
+                )
+                for k0 in range(0, n, bk):
+                    at = a_band[:, k0 : k0 + bk]
+                    bt = _tiles_f32(d[k0 : k0 + bk, j0 : j0 + bn])
+                    if use_kernel:
+                        cand = np.asarray(
+                            minplus_pallas(jnp.asarray(at), jnp.asarray(bt))
+                        )
+                    else:
+                        cand = _minplus_np_tile(at, bt, chunk=chunk)
+                    np.minimum(acc, cand, out=acc)
+                # finite accumulators are true hop counts (< n < sentinel)
+                tile16 = np.where(np.isfinite(acc), acc, np.float32(inf16))
+                nxt[i0 : i0 + bm, j0 : j0 + bn] = tile16.astype(np.int16)
+        if np.array_equal(nxt, d):  # fixed point — host memcmp, no sync
+            return nxt
+        d = nxt
     return d
+
+
+def _tiles_f32(d16: np.ndarray) -> np.ndarray:
+    """float32 view of an int16 hop tile: sentinel -> +inf."""
+    t = d16.astype(np.float32)
+    t[d16 == _INT16_INF] = np.inf
+    return t
+
+
+def _minplus_np_tile(a: np.ndarray, b: np.ndarray, chunk: int = 16) -> np.ndarray:
+    """Cache-blocked numpy min-plus tile product (the CPU tile backend).
+
+    Broadcast temporaries are kept to ``(bm, chunk, bn)`` — the K dimension
+    is walked in ``chunk``-wide strips so the strip stays L2-resident
+    instead of materializing the O(bm*bk*bn) candidate cube.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    acc = np.full((m, n), np.inf, dtype=np.float32)
+    for t0 in range(0, k, chunk):
+        strip = a[:, t0 : t0 + chunk, None] + b[None, t0 : t0 + chunk, :]
+        np.minimum(acc, strip.min(axis=1), out=acc)
+    return acc
 
 
 def power_iteration_lambda2(

@@ -5,12 +5,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .minplus import check_minplus_dtype
+
 __all__ = ["minplus_ref", "matmul_ref", "congestion_ref", "apsp_ref"]
 
 
 @jax.jit
 def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
-    """C[i, j] = min_k A[i, k] + B[k, j] (tropical matmul)."""
+    """C[i, j] = min_k A[i, k] + B[k, j] (tropical matmul).
+
+    Same dtype contract as ``minplus_pallas``: floating operands only
+    (half precision upcast to f32), clear ``ValueError`` otherwise.
+    """
+    a, b = check_minplus_dtype(a, b)
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
 
 

@@ -1,0 +1,413 @@
+"""Blocked min-plus APSP + int16 distances + sharded frontier expansion.
+
+Covers the scale rung: blocked-vs-dense APSP parity (randomized sizes, tile
+shapes that do not divide N, disconnected graphs -> sentinel handling), the
+int16 overflow guard, the REPRO_APSP_BACKEND / set_apsp_backend dispatch, the
+dst-sharded enumerator's exact equivalence to the unsharded one, the
+walk-count memory gate, diameter-hint certification in the min-plus drivers,
+delta-routing chain equivalence on top of blocked distances, and the MW
+solver's adaptive iteration count.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    INT16_INF,
+    Topology,
+    add_switch,
+    apsp_hops,
+    apsp_hops_blocked,
+    build_path_system,
+    extend_server_permutation,
+    fail_links,
+    hops_to_f32,
+    hops_to_int16,
+    jellyfish,
+    lp_concurrent_flow,
+    mw_concurrent_flow,
+    permutation_commodities,
+    random_permutation_traffic,
+    random_server_permutation,
+    set_apsp_backend,
+    update_path_system,
+)
+from repro.core.routing import APSP_BACKENDS, clear_routing_cache
+import repro.core.routing as routing
+from repro.kernels import ops
+
+
+def _two_islands():
+    edges = [(0, 1), (0, 2), (1, 3), (2, 3), (4, 5), (4, 6), (5, 7), (6, 7)]
+    return Topology.regular(8, 5, 3, edges)
+
+
+# --------------------------------------------------------------------------- #
+# blocked-vs-dense parity
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize(
+    "n,row_block", [(33, 8), (96, 17), (130, 50), (257, 64), (64, 200)], ids=str
+)
+def test_blocked_bfs_matches_dense(n, row_block):
+    top = jellyfish(n, 9, 4, seed=n)
+    adj = top.adjacency()
+    want = hops_to_int16(apsp_hops(adj))
+    got = apsp_hops_blocked(adj, row_block=row_block)
+    assert got.dtype == np.int16
+    assert np.array_equal(want, got)
+
+
+@pytest.mark.parametrize(
+    "n,tiles", [(48, (16, 16, 16)), (97, (48, 32, 40)), (130, (64, 48, 64))],
+    ids=str,
+)
+def test_minplus_blocked_matches_dense(n, tiles):
+    """Tiled min-plus powering == BLAS BFS, incl. tiles that don't divide N."""
+    top = jellyfish(n, 9, 4, seed=2 * n + 1)
+    want = hops_to_int16(apsp_hops(top.adjacency()))
+    bm, bn, bk = tiles
+    got = ops.apsp_minplus_blocked(top.adjacency(), bm=bm, bn=bn, bk=bk)
+    assert got.dtype == np.int16
+    assert np.array_equal(want, got)
+
+
+def test_blocked_disconnected_sentinel():
+    top = _two_islands()
+    adj = top.adjacency()
+    want = hops_to_int16(apsp_hops(adj))
+    for got in (
+        apsp_hops_blocked(adj, row_block=3),
+        ops.apsp_minplus_blocked(adj, bm=3, bn=5, bk=4),
+    ):
+        assert np.array_equal(want, got)
+        assert (got[:4, 4:] == INT16_INF).all()  # cross-island = sentinel
+    assert np.isinf(hops_to_f32(want)[0, 4])
+
+
+def test_minplus_blocked_pallas_tiles():
+    """The kernel tile path (interpret mode on CPU) is exact too."""
+    top = jellyfish(24, 8, 5, seed=3)
+    want = hops_to_int16(apsp_hops(top.adjacency()))
+    got = ops.apsp_minplus_blocked(
+        top.adjacency(), bm=16, bn=16, bk=16, backend="pallas"
+    )
+    assert np.array_equal(want, got)
+
+
+# --------------------------------------------------------------------------- #
+# int16 representation
+# --------------------------------------------------------------------------- #
+
+
+def test_int16_overflow_guard():
+    """Finite distance >= sentinel must raise, not wrap."""
+    bad = np.array([[0.0, 40000.0], [40000.0, 0.0]], dtype=np.float32)
+    with pytest.raises(ValueError, match="int16"):
+        hops_to_int16(bad)
+
+
+def test_int16_path_graph_long_diameter():
+    """A 300-hop diameter is far below the sentinel and stays exact."""
+    n = 301
+    edges = [(i, i + 1) for i in range(n - 1)]
+    top = Topology.regular(n, 3, 2, edges)
+    got = apsp_hops_blocked(top.adjacency(), row_block=97)
+    assert int(got[0, n - 1]) == n - 1
+    assert np.array_equal(hops_to_int16(apsp_hops(top.adjacency())), got)
+
+
+def test_roundtrip_converters():
+    top = _two_islands()
+    d = apsp_hops(top.adjacency())
+    assert np.array_equal(hops_to_f32(hops_to_int16(d)), d)
+    # int16 input passes through untouched
+    d16 = hops_to_int16(d)
+    assert hops_to_int16(d16) is d16
+
+
+# --------------------------------------------------------------------------- #
+# backend dispatch
+# --------------------------------------------------------------------------- #
+
+
+def test_apsp_backends_build_identical_path_systems():
+    top = jellyfish(40, 9, 6, seed=0)
+    comm = random_permutation_traffic(top, seed=1)
+    clear_routing_cache()
+    ref = build_path_system(top, comm, k=8)
+    for be in APSP_BACKENDS:
+        prev = set_apsp_backend(be)
+        clear_routing_cache()
+        try:
+            got = build_path_system(top, comm, k=8)
+        finally:
+            set_apsp_backend(prev)
+            clear_routing_cache()
+        assert np.array_equal(ref.path_edges, got.path_edges), be
+        assert np.array_equal(ref.path_owner, got.path_owner), be
+
+
+def test_set_apsp_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown APSP backend"):
+        set_apsp_backend("floydwarshall")
+
+
+@pytest.mark.slow
+def test_env_override_is_resolved_at_import():
+    """REPRO_APSP_BACKEND is read once at import; a bad value must fail
+    loudly on a fresh import rather than being silently ignored."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ, REPRO_APSP_BACKEND="bogus")
+    env["PYTHONPATH"] = str(root / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", "import repro.core.routing"],
+        env=env,
+        capture_output=True,
+        text=True,
+        cwd=str(root),
+    )
+    assert proc.returncode != 0
+    assert "REPRO_APSP_BACKEND" in proc.stderr
+
+
+# --------------------------------------------------------------------------- #
+# sharded frontier expansion
+# --------------------------------------------------------------------------- #
+
+
+def test_sharded_enumeration_matches_unsharded(monkeypatch):
+    """Tiny tile budget -> many dst shards; path system must be identical."""
+    top = jellyfish(40, 9, 6, seed=4)
+    comm = random_permutation_traffic(top, seed=5)
+    ref = build_path_system(top, comm, k=8, cache=False)
+    monkeypatch.setattr(routing, "_FRONTIER_TILE_BYTES", 1024)  # ~6 rows/shard
+    got = build_path_system(top, comm, k=8, cache=False)
+    assert np.array_equal(ref.path_edges, got.path_edges)
+    assert np.array_equal(ref.path_owner, got.path_owner)
+    assert np.array_equal(ref.path_len, got.path_len)
+
+
+def test_walk_count_gate_matches_full_table(monkeypatch):
+    """Forcing the subset-slack fallback must not change the path sets."""
+    top = jellyfish(40, 9, 6, seed=4)
+    comm = random_permutation_traffic(top, seed=5)
+    ref = build_path_system(top, comm, k=8, cache=False)
+    monkeypatch.setattr(routing, "_WALK_TABLE_BYTES", 0)
+    got = build_path_system(top, comm, k=8, cache=False)
+    assert np.array_equal(ref.path_edges, got.path_edges)
+
+
+# --------------------------------------------------------------------------- #
+# diameter hint (plumbed from Topology degree/size bound)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("hint", [1, 2, 3, 16, None])
+def test_minplus_hint_certified_exact(hint):
+    """Even an undershooting hint yields exact distances (certify pass)."""
+    top = jellyfish(48, 8, 5, seed=7)
+    want = apsp_hops(top.adjacency())
+    got = np.asarray(
+        ops.apsp_minplus(top.adjacency(), backend="ref", diameter_hint=hint)
+    )
+    finite = np.isfinite(want)
+    assert np.array_equal(np.isinf(want), np.isinf(got))
+    assert np.array_equal(want[finite], got[finite])
+
+
+@pytest.mark.parametrize("hint", [1, 4, 64, None])
+def test_minplus_blocked_hint_never_caps(hint):
+    """The blocked driver certifies via its free host fixed-point check, so
+    even a badly undershooting hint must yield exact distances."""
+    top = jellyfish(48, 8, 5, seed=9)
+    want = hops_to_int16(apsp_hops(top.adjacency()))
+    got = ops.apsp_minplus_blocked(top.adjacency(), diameter_hint=hint)
+    assert np.array_equal(want, got)
+
+
+def test_blocked_drivers_exact_on_high_diameter_circulant():
+    """Circulant C_128(1, 2): min degree 4 but true diameter 32 — the
+    Bollobás degree/size hint undershoots badly (it is an RRG bound, not a
+    general one), so every driver must certify rather than trust it."""
+    n = 128
+    edges = {tuple(sorted((i, (i + s) % n))) for i in range(n) for s in (1, 2)}
+    top = Topology.regular(n, 6, 4, sorted(edges))
+    want_f32 = apsp_hops(top.adjacency())
+    assert int(want_f32.max()) == 32
+    want = hops_to_int16(want_f32)
+    hint = routing._diameter_hint(top)  # undershoots the true diameter
+    assert hint is not None and hint < 32
+    got_blk = ops.apsp_minplus_blocked(top.adjacency(), diameter_hint=hint)
+    assert np.array_equal(want, got_blk)
+    got_mp = np.asarray(
+        ops.apsp_minplus(top.adjacency(), backend="ref", diameter_hint=hint)
+    )
+    np.testing.assert_array_equal(want_f32, got_mp)
+
+
+def test_diameter_hint_is_upper_bound_on_rrgs():
+    for n, k, r, seed in [(32, 8, 5, 0), (96, 12, 8, 1), (200, 16, 12, 2)]:
+        top = jellyfish(n, k, r, seed=seed)
+        hint = routing._diameter_hint(top)
+        true_diam = int(apsp_hops(top.adjacency()).max())
+        assert hint is not None and hint >= true_diam, (n, hint, true_diam)
+
+
+# --------------------------------------------------------------------------- #
+# minplus dtype validation
+# --------------------------------------------------------------------------- #
+
+
+def test_minplus_rejects_integer_dtypes():
+    from repro.kernels import ref
+    from repro.kernels.minplus import minplus_pallas
+
+    import jax.numpy as jnp
+
+    a = jnp.ones((4, 4), jnp.int32)
+    with pytest.raises(ValueError, match="floating point"):
+        minplus_pallas(a, a, interpret=True)
+    with pytest.raises(ValueError, match="floating point"):
+        ref.minplus_ref(a, a)
+
+
+def test_minplus_upcasts_half_precision():
+    from repro.kernels import ref
+    from repro.kernels.minplus import minplus_pallas
+
+    import jax.numpy as jnp
+
+    a = jnp.asarray(np.arange(16.0).reshape(4, 4), jnp.bfloat16)
+    got = minplus_pallas(a, a, bm=8, bn=8, bk=8, interpret=True)
+    assert got.dtype == jnp.float32
+    want = ref.minplus_ref(a.astype(jnp.float32), a.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# delta routing on blocked/int16 distances
+# --------------------------------------------------------------------------- #
+
+
+def _assert_same_system(ps, full):
+    __tracebackhide__ = True
+    assert np.array_equal(ps.unrouted, full.unrouted)
+    assert ps.n_commodities == full.n_commodities
+    a = ps.path_edges[np.lexsort(ps.path_edges.T)]
+    b = full.path_edges[np.lexsort(full.path_edges.T)]
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_delta_chain_equivalence_on_blocked_distances():
+    """Expansion + failure chain with the blocked APSP backend forced: every
+    delta update must equal a from-scratch rebuild exactly (the certify path
+    _dist_is_exact accepts the int16 candidates the repair produces)."""
+    prev = set_apsp_backend("blocked")
+    clear_routing_cache()
+    try:
+        top = jellyfish(48, 10, 6, seed=11)
+        perm = random_server_permutation(top.n_servers, seed=0)
+        comm = permutation_commodities(top, perm)
+        ps = build_path_system(top, comm, k=8)
+        rng = np.random.default_rng(0)
+        for step in range(3):
+            tn = add_switch(top, 10, 6, seed=rng)
+            perm = extend_server_permutation(perm, tn.n_servers, seed=rng)
+            comm = permutation_commodities(tn, perm)
+            ps = update_path_system(ps, top, tn, comm)
+            _assert_same_system(ps, build_path_system(tn, comm, k=8, cache=False))
+            top = tn
+        tf = fail_links(top, n_links=5, seed=3)
+        ps = update_path_system(ps, top, tf, comm)
+        full = build_path_system(tf, comm, k=8, cache=False)
+        _assert_same_system(ps, full)
+        assert lp_concurrent_flow(ps).alpha == pytest.approx(
+            lp_concurrent_flow(full).alpha, abs=1e-9
+        )
+    finally:
+        set_apsp_backend(prev)
+        clear_routing_cache()
+
+
+def test_repair_certify_accepts_int16(monkeypatch):
+    """N >= 384 delta: the int16 candidate from _repair_dist passes the
+    int16-aware Bellman certify and reproduces the rebuilt system."""
+    top = jellyfish(400, 12, 8, seed=1)
+    perm = random_server_permutation(top.n_servers, seed=0)
+    comm = permutation_commodities(top, perm)
+    ps = build_path_system(top, comm, k=4)
+    tn = add_switch(top, 12, 8, seed=5)
+    perm2 = extend_server_permutation(perm, tn.n_servers, seed=5)
+    comm2 = permutation_commodities(tn, perm2)
+    ps2 = update_path_system(ps, top, tn, comm2)
+    assert routing._topo_cache[routing._topo_key(tn)]["dist"].dtype == np.int16
+    _assert_same_system(ps2, build_path_system(tn, comm2, k=4, cache=False))
+
+
+def test_dist_is_exact_int16_and_f32_agree():
+    top = jellyfish(30, 8, 5, seed=6)
+    entry = {}
+    nbr = routing._cached_nbr(top, entry)
+    d = apsp_hops(top.adjacency())
+    d16 = hops_to_int16(d)
+    assert routing._dist_is_exact(d, nbr)
+    assert routing._dist_is_exact(d16, nbr)
+    wrong = d16.copy()
+    wrong[1, 2] += 1
+    assert not routing._dist_is_exact(wrong, nbr)
+    # disconnected graphs: sentinel rows satisfy the recurrence
+    isl = _two_islands()
+    e2 = {}
+    nbr2 = routing._cached_nbr(isl, e2)
+    assert routing._dist_is_exact(
+        hops_to_int16(apsp_hops(isl.adjacency())), nbr2
+    )
+
+
+# --------------------------------------------------------------------------- #
+# MW adaptive iteration count
+# --------------------------------------------------------------------------- #
+
+
+def test_mw_chunked_windows_match_single_scan():
+    top = jellyfish(40, 10, 6, seed=4)
+    ps = build_path_system(top, random_permutation_traffic(top, seed=5), k=8)
+    fixed = mw_concurrent_flow(ps, iters=100)
+    chunked = mw_concurrent_flow(
+        ps, iters=100, early_stop=True, check_every=25, rel_tol=0.0
+    )
+    assert chunked.alpha == pytest.approx(fixed.alpha, abs=1e-6)
+    assert chunked.iters == 100  # rel_tol 0 never plateaus
+
+
+def test_mw_target_alpha_stops_early():
+    top = jellyfish(40, 10, 6, seed=4)
+    ps = build_path_system(top, random_permutation_traffic(top, seed=5), k=8)
+    full = mw_concurrent_flow(ps, iters=400)
+    probe = mw_concurrent_flow(
+        ps, iters=400, target_alpha=0.5 * full.alpha, check_every=25
+    )
+    assert probe.alpha >= 0.5 * full.alpha
+    assert probe.iters < 400
+    # the early-stopped solution is still feasible
+    loads = ps.loads(probe.rates)
+    assert (loads <= ps.capacities * (1 + 1e-4)).all()
+
+
+def test_mw_early_stop_plateau():
+    top = jellyfish(30, 8, 5, seed=2)
+    ps = build_path_system(top, random_permutation_traffic(top, seed=3), k=4)
+    res = mw_concurrent_flow(
+        ps, iters=4000, early_stop=True, check_every=50, rel_tol=1e-3
+    )
+    full = mw_concurrent_flow(ps, iters=4000)
+    assert res.iters < 4000  # plateaued well before the budget
+    assert res.alpha >= 0.98 * full.alpha

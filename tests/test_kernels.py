@@ -92,6 +92,28 @@ def test_apsp_minplus_matches_blas_bfs():
     np.testing.assert_array_equal(d_ref[finite], d_mp[finite])
 
 
+def test_apsp_minplus_blocked_matches_apsp_ref():
+    """Tiled int16 driver == dense jnp squaring oracle (kernel-level parity)."""
+    from repro.core import jellyfish
+
+    top = jellyfish(40, 8, 5, seed=11)
+    d_ref = np.asarray(ref.apsp_ref(jnp.asarray(top.adjacency())))
+    d_blk = ops.apsp_minplus_blocked(top.adjacency(), bm=16, bn=24, bk=16)
+    assert d_blk.dtype == np.int16
+    inf16 = np.iinfo(np.int16).max
+    assert np.array_equal(np.isinf(d_ref), d_blk == inf16)
+    finite = ~np.isinf(d_ref)
+    np.testing.assert_array_equal(d_ref[finite], d_blk[finite].astype(np.float32))
+
+
+def test_minplus_integer_dtype_raises():
+    a = jnp.ones((8, 8), jnp.int16)
+    with pytest.raises(ValueError, match="floating point"):
+        minplus_pallas(a, a, bm=8, bn=8, bk=8, interpret=True)
+    with pytest.raises(ValueError, match="floating point"):
+        ref.minplus_ref(a, a)
+
+
 def test_power_iteration_lambda2_matches_dense_eig():
     from repro.core import jellyfish
 

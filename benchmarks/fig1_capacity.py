@@ -41,7 +41,10 @@ def fig1c() -> list[dict]:
     # build_path_system's per-topology cache amortizes the APSP/walk-count
     # precompute across them (the batched routing engine is what makes the
     # k = 12/14 fat-tree equivalents — 180-245 switches, reachable only in
-    # FULL mode before — routine).
+    # FULL mode before — routine).  Probes route through the batched-solver
+    # bisection driver; at these LP-sized instances the searches stay
+    # sequential (wave_levels=1 — speculative waves pay off where MW probes
+    # dominate, see kernels_bench mw_batch_* / fig1c_speculative rows).
     rows = []
     ks = (4, 6, 8, 10, 12, 14) if FULL else (4, 6, 8, 10)
     for k in ks:
@@ -64,11 +67,44 @@ def fig1c() -> list[dict]:
     return rows
 
 
+def fig1c_speculative_parity() -> dict:
+    """Speculative-wave bisection must land on the sequential search's exact
+    server count (the wave only precomputes the probes bisection would
+    make); record both answers and wall-clocks for the k=4 equivalent."""
+    eq = fattree_equipment(4)
+    args = dict(lo=eq["servers"] // 2, hi=2 * eq["servers"], seeds=(0,))
+    # both legs rebuild content-identical topologies, so each must start
+    # cold — the routing cache is keyed by edge fingerprint and would serve
+    # the second leg the first leg's path systems, biasing its wall-clock.
+    # An untimed warmup absorbs the process one-time costs (first HiGHS
+    # solve, scipy imports) that would otherwise all land on the first leg.
+    max_servers_at_full_capacity(eq["switches"], eq["ports_per_switch"], **args)
+    clear_routing_cache()
+    with Timer() as t_seq:
+        seq = max_servers_at_full_capacity(
+            eq["switches"], eq["ports_per_switch"], **args
+        )
+    clear_routing_cache()
+    with Timer() as t_wave:
+        wave = max_servers_at_full_capacity(
+            eq["switches"], eq["ports_per_switch"], wave_levels=2, **args
+        )
+    clear_routing_cache()
+    return {
+        "sequential_servers": seq,
+        "speculative_servers": wave,
+        "identical": seq == wave,
+        "sequential_s": round(t_seq.dt, 2),
+        "speculative_s": round(t_wave.dt, 2),
+    }
+
+
 def run() -> list[str]:
     ab = fig1ab()
     rows = fig1c()
+    spec = fig1c_speculative_parity()
     save("fig1ab_bisection_curves", ab)
-    save("fig1c_servers_at_capacity", {"rows": rows})
+    save("fig1c_servers_at_capacity", {"rows": rows, "speculative": spec})
     out = []
     for r in rows:
         out.append(
@@ -79,6 +115,15 @@ def run() -> list[str]:
                 f"(x{r['ratio']:.2f})",
             )
         )
+    out.append(
+        csv_row(
+            "fig1c_speculative_parity",
+            spec["speculative_s"] * 1e6,
+            f"seq={spec['sequential_servers']}"
+            f";wave={spec['speculative_servers']}"
+            f";identical={spec['identical']}",
+        )
+    )
     return out
 
 

@@ -11,6 +11,11 @@ level), and the path system is repaired per increment through
 ``routing.update_path_system`` instead of rebuilt from scratch.  A full
 rebuild at every level cross-checks alpha parity; the JSON payload records
 the delta-vs-rebuild routing speedup alongside the throughput rows.
+
+The per-seed sweeps advance in LOCKSTEP so every failure level's alpha
+evaluations — all seeds' delta systems plus their rebuild cross-checks —
+go through ``benchmarks.common.batch_alphas`` (LP below the path cutoff,
+one ``mw_concurrent_flow_batch`` call above it), the batched-solver rung.
 """
 
 from __future__ import annotations
@@ -23,54 +28,70 @@ from repro.core import (
     fattree,
     fattree_equipment,
     jellyfish,
-    lp_concurrent_flow,
-    mw_concurrent_flow,
     random_permutation_traffic,
     update_path_system,
 )
 
-from .common import Timer, csv_row, jellyfish_same_equipment, save
+from .common import Timer, batch_alphas, csv_row, jellyfish_same_equipment, save
 
 
-def _alpha(ps) -> float:
-    if ps.n_paths == 0:
-        return 0.0
-    if ps.n_paths > 30000:
-        return mw_concurrent_flow(ps, iters=500).alpha
-    return lp_concurrent_flow(ps).alpha
-
-
-def _incremental_fail_sweep(top, fractions, seed: int, k: int, slack: int) -> dict:
-    """Cumulatively fail links, delta-updating the path system per level."""
-    rng = np.random.default_rng(seed)
-    comm = random_permutation_traffic(top, seed=seed)
-    with Timer() as t_b:
-        ps = build_path_system(top, comm, k=k, max_slack=slack)
-    t_delta = t_b.dt
-    t_full = t_b.dt
+def _incremental_fail_sweeps(top, fractions, seeds, k: int, slack: int) -> list[dict]:
+    """Cumulatively fail links for several sweep seeds in lockstep,
+    delta-updating each seed's path system per level and evaluating every
+    level's (delta + rebuild) systems in one batched alpha call."""
+    states = []
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        comm = random_permutation_traffic(top, seed=seed)
+        with Timer() as t_b:
+            ps = build_path_system(top, comm, k=k, max_slack=slack)
+        states.append({
+            "rng": rng, "comm": comm, "ps": ps, "cur": top, "removed": 0,
+            "t_delta": t_b.dt, "t_full": t_b.dt, "alphas": {}, "parity": 0.0,
+        })
     e0 = top.n_edges
-    removed = 0
-    cur = top
-    alphas, parity = {}, 0.0
-    a_cur = _alpha(ps)
+    cur_alpha = batch_alphas([st["ps"] for st in states])
     for f in fractions:
-        need = int(round(f * e0)) - removed
-        if need > 0:
-            nxt = fail_links(cur, seed=rng, n_links=need)
-            with Timer() as t_u:
-                ps = update_path_system(ps, cur, nxt, comm)
-            t_delta += t_u.dt
-            with Timer() as t_f:
-                ps_full = build_path_system(nxt, comm, k=k, max_slack=slack,
-                                            cache=False)
-            t_full += t_f.dt
-            a_cur = _alpha(ps)
-            parity = max(parity, abs(a_cur - _alpha(ps_full)))
-            cur = nxt
-            removed += need
-        alphas[f] = min(a_cur, 1.0)
-    return {"alphas": alphas, "delta_s": t_delta, "rebuild_s": t_full,
-            "speedup": t_full / max(t_delta, 1e-12), "max_alpha_diff": parity}
+        changed = []
+        for si, st in enumerate(states):
+            need = int(round(f * e0)) - st["removed"]
+            if need > 0:
+                nxt = fail_links(st["cur"], seed=st["rng"], n_links=need)
+                with Timer() as t_u:
+                    st["ps"] = update_path_system(st["ps"], st["cur"], nxt,
+                                                  st["comm"])
+                st["t_delta"] += t_u.dt
+                with Timer() as t_f:
+                    st["ps_full"] = build_path_system(
+                        nxt, st["comm"], k=k, max_slack=slack, cache=False
+                    )
+                st["t_full"] += t_f.dt
+                st["cur"] = nxt
+                st["removed"] += need
+                changed.append(si)
+        if changed:
+            # one batched evaluation per level: each changed seed's delta
+            # system and its from-scratch rebuild (the parity cross-check)
+            a = batch_alphas(
+                [states[si]["ps"] for si in changed]
+                + [states[si]["ps_full"] for si in changed]
+            )
+            for j, si in enumerate(changed):
+                cur_alpha[si] = a[j]
+                states[si]["parity"] = max(
+                    states[si]["parity"], abs(a[j] - a[len(changed) + j])
+                )
+        for si, st in enumerate(states):
+            st["alphas"][f] = min(cur_alpha[si], 1.0)
+    return [
+        {
+            "alphas": st["alphas"], "delta_s": st["t_delta"],
+            "rebuild_s": st["t_full"],
+            "speedup": st["t_full"] / max(st["t_delta"], 1e-12),
+            "max_alpha_diff": st["parity"],
+        }
+        for st in states
+    ]
 
 
 def run() -> list[str]:
@@ -83,10 +104,10 @@ def run() -> list[str]:
     fractions = (0.0, 0.03, 0.06, 0.09, 0.12, 0.15)
     rows, out = [], []
     with Timer() as t:
-        ft_sweeps = [_incremental_fail_sweep(ft, fractions, seed=s, k=16, slack=4)
-                     for s in range(3)]
-        jf_sweeps = [_incremental_fail_sweep(jf, fractions, seed=s, k=16, slack=4)
-                     for s in range(3)]
+        ft_sweeps = _incremental_fail_sweeps(ft, fractions, seeds=range(3),
+                                             k=16, slack=4)
+        jf_sweeps = _incremental_fail_sweeps(jf, fractions, seeds=range(3),
+                                             k=16, slack=4)
         for f in fractions:
             a_ft = float(np.mean([sw["alphas"][f] for sw in ft_sweeps]))
             a_jf = float(np.mean([sw["alphas"][f] for sw in jf_sweeps]))
@@ -103,15 +124,16 @@ def run() -> list[str]:
     for tseed in (1, 2, 3):
         top = jellyfish(120, 13, 10, seed=tseed)
         failed = fail_links(top, 0.15, seed=90 + tseed)
-        base_as, aft_as = [], []
+        systems = []
         for s in range(2):
             comm = random_permutation_traffic(top, seed=s)
             ps = build_path_system(top, comm, k=8, max_slack=4)
-            base_as.append(_alpha(ps))
             # the failed fabric reuses the intact fabric's routing state
             ps_f = update_path_system(ps, top, failed, comm)
-            aft_as.append(_alpha(ps_f))
-        base, aft = float(np.mean(base_as)), float(np.mean(aft_as))
+            systems.extend([ps, ps_f])
+        # the tseed's four (intact, failed) x matrix solves in one batch
+        a = batch_alphas(systems)
+        base, aft = float(np.mean(a[0::2])), float(np.mean(a[1::2]))
         raw_drops.append(1 - aft / base)
         norm_after.append(min(aft, 1.0) / min(base, 1.0))
     drop = float(np.mean(raw_drops))

@@ -6,9 +6,11 @@ Public API re-exports — see DESIGN.md §3 for the per-module map.
 from .bisection import (
     bollobas_bound,
     kernighan_lin_bisection,
+    max_feasible,
     normalized_bisection,
     spectral_lambda2,
     spectral_lower_bound,
+    speculative_max_feasible,
 )
 from .clos import ClosSpec, build_clos
 from .degree_diameter import CATALOG as DD_CATALOG
@@ -18,9 +20,11 @@ from .failures import fail_links, fail_switches
 from .fattree import fattree, fattree_equipment
 from .flow import (
     FlowResult,
+    PathSystemBatch,
     lp_concurrent_flow,
     lp_edge_concurrent_flow,
     mw_concurrent_flow,
+    mw_concurrent_flow_batch,
     throughput,
 )
 from .jellyfish import jellyfish, jellyfish_heterogeneous, rrg
@@ -74,12 +78,14 @@ __all__ = [
     "hops_to_f32", "path_stats", "PathStats", "bollobas_diameter_bound",
     "bollobas_bound", "spectral_lambda2", "spectral_lower_bound",
     "kernighan_lin_bisection", "normalized_bisection",
+    "max_feasible", "speculative_max_feasible",
     "Commodities", "random_permutation_traffic", "all_to_all_traffic",
     "random_server_permutation", "extend_server_permutation",
     "permutation_commodities",
     "PathSystem", "build_path_system", "k_shortest_paths", "update_path_system",
     "set_apsp_backend",
-    "FlowResult", "mw_concurrent_flow", "lp_concurrent_flow",
+    "FlowResult", "PathSystemBatch", "mw_concurrent_flow",
+    "mw_concurrent_flow_batch", "lp_concurrent_flow",
     "lp_edge_concurrent_flow", "throughput",
     "MptcpResult", "mptcp_throughput",
     "fail_links", "fail_switches",

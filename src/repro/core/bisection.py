@@ -16,6 +16,17 @@ Three estimators, used together:
 For same-equipment comparisons (Fig 6 / LEGUP), we report KL cut width
 normalized by one partition's server bandwidth, bracketing it with the
 spectral lower bound.
+
+This module also hosts the paper-§4 *binary-search* machinery
+(``max_feasible`` / ``speculative_max_feasible``): the Fig 1c
+``max_servers_at_full_capacity`` search spends all of its wall-clock inside
+one throughput probe per bracket-halving, so the speculative driver
+evaluates several levels of the bisection tree per wave — one batched
+``mw_concurrent_flow_batch`` call answers every probe the next ``levels``
+halvings could possibly ask — and then descends the tree with the answers
+in hand.  The result is IDENTICAL to the sequential search for any
+predicate (both monotone and not): the wave only precomputes the exact
+probes sequential bisection would make.
 """
 
 from __future__ import annotations
@@ -30,7 +41,77 @@ __all__ = [
     "spectral_lower_bound",
     "kernighan_lin_bisection",
     "normalized_bisection",
+    "max_feasible",
+    "speculative_max_feasible",
 ]
+
+
+# --------------------------------------------------------------------------- #
+# feasibility binary search (paper §4: servers supported at full capacity)
+# --------------------------------------------------------------------------- #
+
+
+def max_feasible(lo: int, hi: int, ok) -> int:
+    """Classic bisection: largest m in [lo, hi] the probe accepts.
+
+    Maintains the invariant that ``lo`` is accepted (callers pass a known
+    floor) and everything above ``hi`` is rejected; one probe per halving.
+    """
+    lo, hi = int(lo), int(hi)
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def _wave_candidates(lo: int, hi: int, levels: int) -> list[int]:
+    """Every midpoint the next ``levels`` bisection steps could probe."""
+    cands: set[int] = set()
+
+    def rec(l: int, h: int, d: int) -> None:
+        if d == 0 or l >= h:
+            return
+        m = (l + h + 1) // 2
+        cands.add(m)
+        rec(m, h, d - 1)  # the accept branch
+        rec(l, m - 1, d - 1)  # the reject branch
+    rec(lo, hi, levels)
+    return sorted(cands)
+
+
+def speculative_max_feasible(lo: int, hi: int, ok_batch, levels: int = 2) -> int:
+    """Bisection that probes in speculative waves; result identical to
+    ``max_feasible`` for ANY probe, monotone or not.
+
+    Each wave hands ``ok_batch`` every candidate the next ``levels``
+    sequential halvings could ask about (at most ``2**levels - 1`` of them
+    — the top of the current bisection tree) and receives per-candidate
+    verdicts, then replays the sequential descent using the precomputed
+    answers.  Wall-clock rounds shrink by ``levels``x; the probe count grows
+    by at most ``(2**levels - 1) / levels``x, which is what the batched MW
+    solver's multi-instance throughput is for.
+
+    ``ok_batch(candidates)`` takes a sorted list of ints and returns a
+    same-length sequence of bools.
+    """
+    lo, hi = int(lo), int(hi)
+    if levels < 1:
+        raise ValueError(f"levels must be >= 1, got {levels}")
+    while lo < hi:
+        cands = _wave_candidates(lo, hi, levels)
+        verdict = dict(zip(cands, ok_batch(cands)))
+        for _ in range(levels):
+            if lo >= hi:
+                break
+            mid = (lo + hi + 1) // 2
+            if verdict[mid]:
+                lo = mid
+            else:
+                hi = mid - 1
+    return lo
 
 
 def bollobas_bound(k: int, r: int) -> float:

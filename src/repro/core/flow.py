@@ -37,13 +37,58 @@ exact current loads either way.
 Maximum concurrent flow: maximize alpha s.t. each commodity i routes
 ``alpha * d_i`` and edge loads respect capacities.  For the capacity question
 "does this topology support every server at full rate" the test is alpha >= 1.
+
+Batched solves
+--------------
+Every headline sweep (the Fig 1c bisection, capacity-vs-size curves, Fig 7
+failure stages) solves MANY independent MW instances, and a single-instance
+solver leaves the device mostly idle while the driver loops in Python —
+worse, every instance has its own (P, S) shapes, so each sequential solve
+retraces and recompiles the window scan.  ``PathSystemBatch`` pads B path
+systems to a common (P_max, L_max, S_max, K_max) envelope with per-instance
+validity masks (padded slots carry infinite capacity and are masked out of
+the softmax; padded path rows belong to a zero-demand dummy commodity), and
+``mw_concurrent_flow_batch`` runs ONE batched window scan over the stack:
+
+* per-instance adaptive state — plateau / ``target_alpha`` early-stop is
+  tracked per instance on the host, and a converged instance's carry is
+  frozen bit-exactly (masked updates) while stragglers run on, so each
+  instance reports exactly the iteration count its sequential solve would;
+* a shared-topology fast path (``PathSystemBatch.from_shared``) keeps one
+  (P, L) path table and varies only demands, for sweeps over traffic
+  matrices on a fixed routing;
+* the congestion inner loop goes through ``make_congestion_fn_batch``:
+  a flat segment-sum with per-instance slot offsets (scatter), a stacked
+  rank-3 incidence through ``ops.congestion`` (one fused-kernel pass per
+  batch member per iteration on TPU), or — the CPU default for batches —
+  ``gather``: transposed fan-in tables precomputed at batch build time
+  (for every slot, the flat positions of the path hops crossing it; for
+  every commodity, its path rows), which turn the XLA scatter-adds that
+  dominate the scatter backend's iteration (~5 ms at RRG(512), serialized
+  element loop) into vectorized gather+sum (~0.13 ms measured).  The
+  tables are why batched solves are several times faster than the same
+  instances solved sequentially on CPU, not just less dispatch overhead.
+
+Per-instance results match ``mw_concurrent_flow`` to float tolerance —
+BIT-exactly (alpha diff 0.0, identical adaptive iteration counts) against
+the sequential ``scatter`` backend, whose accumulation order the gather
+tables reproduce; small CPU instances default the sequential solver to
+``dense``, where reassociation-level drift (~1e-4 after the anneal) is
+expected.  The speculative bisection
+(``core.bisection.speculative_max_feasible``) and the benchmark sweep
+drivers (``benchmarks.common.batch_alphas``) sit on top.
+
+``REPRO_LP_PATH_LIMIT`` (validated at import) moves the ``throughput()``
+LP-vs-MW cutoff from its 20000-path default.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import warnings
+from typing import Sequence
 
 import numpy as np
 
@@ -55,11 +100,41 @@ from ..kernels import ops
 
 __all__ = [
     "FlowResult",
+    "PathSystemBatch",
     "mw_concurrent_flow",
+    "mw_concurrent_flow_batch",
     "lp_concurrent_flow",
     "lp_edge_concurrent_flow",
     "throughput",
+    "LP_PATH_LIMIT",
 ]
+
+
+def _read_lp_path_limit() -> int:
+    """``REPRO_LP_PATH_LIMIT``: the throughput() LP-vs-MW cutoff, validated
+    ONCE at import (mirrors REPRO_APSP_BACKEND) so a typo fails loudly at
+    startup rather than silently running every sweep through the wrong
+    solver."""
+    raw = os.environ.get("REPRO_LP_PATH_LIMIT", "").strip()
+    if not raw:
+        return 20000
+    try:
+        limit = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_LP_PATH_LIMIT={raw!r}: expected a non-negative integer "
+            "(paths at or below it go to the exact LP in throughput())"
+        ) from None
+    if limit < 0:
+        raise ValueError(
+            f"REPRO_LP_PATH_LIMIT={limit}: expected a non-negative integer"
+        )
+    return limit
+
+
+#: throughput()'s auto dispatch solves instances with at most this many path
+#: variables exactly (single-core HiGHS needs minutes much beyond ~10k).
+LP_PATH_LIMIT = _read_lp_path_limit()
 
 
 @dataclasses.dataclass
@@ -78,6 +153,39 @@ class FlowResult:
 # --------------------------------------------------------------------------- #
 # congestion-primitive backends (shared with core.mptcp)
 # --------------------------------------------------------------------------- #
+
+
+def _fold_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over the last axis by positional halving.
+
+    XLA's reduce chooses its association by array size, so summing a
+    zero-padded axis can differ from the unpadded sum by an ulp — and the
+    MW anneal amplifies single-ulp differences into visible alpha drift.
+    A positional halving tree is PADDING-INVARIANT: pad to a power of two
+    and fold, and any all-zero half merges as an exact identity, so the
+    grouping of the real elements depends only on their positions.  Both
+    the sequential and the batched solver sum through this, which is what
+    keeps ragged/bucketed batches bit-identical to sequential solves.
+    """
+    n = x.shape[-1]
+    if n == 0:
+        return jnp.zeros(x.shape[:-1], x.dtype)
+    pow2 = 1 << (n - 1).bit_length() if n > 1 else 1
+    if pow2 != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, pow2 - n)]
+        x = jnp.pad(x, pad)
+    while x.shape[-1] > 1:
+        h = x.shape[-1] // 2
+        x = x[..., :h] + x[..., h:]
+    return x[..., 0]
+
+
+def _masked_softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over the last axis with ``-inf`` masking and a fold-sum
+    denominator (see ``_fold_sum`` for why not ``jax.nn.softmax``)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.where(jnp.isfinite(logits), jnp.exp(logits - m), 0.0)
+    return e / _fold_sum(e)[..., None]
 
 
 def dense_incidence(path_edges: jnp.ndarray, n_slots: int) -> jnp.ndarray:
@@ -106,7 +214,7 @@ def make_congestion_fn(path_edges: jnp.ndarray, n_slots: int, backend: str):
                 .add(flat)[:n_slots]
             )
             pr_pad = jnp.concatenate([prices, jnp.zeros((1,), jnp.float32)])
-            costs = jnp.sum(pr_pad[path_edges], axis=1)
+            costs = _fold_sum(pr_pad[path_edges])
             return loads, costs
 
         return fused
@@ -122,9 +230,205 @@ def make_congestion_fn(path_edges: jnp.ndarray, n_slots: int, backend: str):
     return fused
 
 
-def _resolve_backend(backend: str, n_paths: int, n_slots: int) -> str:
+def _ordered_fan_in_sum(fr: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Sum ``fr`` entries selected by a fan-in table, LEFT-TO-RIGHT.
+
+    ``fr`` is (Bt, N + 1) with a trailing zero pad; ``table`` is (S, D)
+    (shared) or (Bt, S, D) of indices into N+1, each row listing one
+    segment's members in ascending position order, padded with N.  The D
+    columns are accumulated one by one — a trace-time unroll, D is ~tens —
+    so each segment's sum associates exactly like the XLA scatter-add it
+    replaces (updates applied in position order).  A tree-reduction ``sum``
+    here would differ by an ulp and the MW anneal amplifies that into
+    visible alpha drift over hundreds of iterations.
+    """
+    d = table.shape[-1]
+    Bt = fr.shape[0]
+    S = table.shape[-2]
+    acc = jnp.zeros((Bt, S), jnp.float32)
+    for j in range(d):
+        if table.ndim == 2:
+            acc = acc + fr[:, table[:, j]]
+        else:
+            acc = acc + jnp.take_along_axis(fr, table[:, :, j], axis=1)
+    return acc
+
+
+#: Skip the transposed gather tables when slot-fan-in skew would inflate
+#: them past this multiple of the hop count (the driver falls back to the
+#: scatter backend).  Random-graph path systems sit far below it: fan-in is
+#: within ~4x of the mean at RRG(512..8192).
+_GATHER_TABLE_GUARD = 16
+
+
+def _bucket_up(n: int, step: int) -> int:
+    """Round ``n`` up to a multiple of ``step`` (shape-bucketing for jit
+    cache reuse across batches of nearby sizes)."""
+    return max(((int(n) + step - 1) // step) * step, step)
+
+
+def _bucket_up_geom(n: int) -> int:
+    """Scale-proportional shape bucket: the step is ~n/8 (at least 256), so
+    masked-compute waste stays bounded (~12%) while nearby sizes collapse
+    onto one compiled shape at every scale."""
+    n = max(int(n), 1)
+    step = max(256, 1 << max(n.bit_length() - 3, 0))
+    return _bucket_up(n, step)
+
+
+def make_congestion_fn_batch(
+    path_edges: jnp.ndarray,
+    n_slots: int,
+    n_batch: int,
+    backend: str,
+    slot_gather: jnp.ndarray | None = None,
+):
+    """Batched fused (loads, costs) closure over a stack of path systems.
+
+    ``path_edges`` is (Bt, P, L) — or (P, L) for the shared-topology fast
+    path, where all instances route over the same table and only rates and
+    prices vary.  The closure maps (Bt, P) rates and (Bt, S) prices to
+    (Bt, S) loads and (Bt, P) costs:
+
+    * ``scatter`` — ONE flat segment-sum over ``Bt * (S + 1)`` slots using
+      per-instance slot offsets (instance b's slot e lands at ``b*(S+1)+e``,
+      its padding sentinel in b's private garbage slot), so the whole batch
+      is a single scatter-add per iteration rather than Bt separate ones.
+    * ``dense``/``pallas`` — materializes the stacked rank-3 (Bt, P, S)
+      incidence once (hoisted out of the scan by jit) and calls
+      ``ops.congestion`` on it: one fused-kernel tile pass per batch member
+      per iteration.
+    * ``gather`` — the CPU default for batches: per-slot transposed fan-in
+      tables (``slot_gather``, precomputed by ``PathSystemBatch``) turn the
+      load accumulation into vectorized gathers — ~40x faster than the
+      serialized XLA scatter-add on CPU at RRG(512) shapes.  Each slot's
+      fan-in is accumulated left-to-right in flat-position order
+      (``_ordered_fan_in_sum``), the same order the scatter-add applies its
+      updates, so the two backends agree BIT-EXACTLY and the MW iteration
+      (whose annealing softmax amplifies even 1-ulp load differences over
+      hundreds of steps) follows the identical trajectory.
+
+    Within an instance the accumulation order therefore always matches the
+    single-instance ``make_congestion_fn``, which is what keeps batched
+    solves at bit parity with sequential ones.
+    """
+    shared = path_edges.ndim == 2
+    if backend == "gather":
+        if slot_gather is None:
+            raise ValueError(
+                "gather backend needs the PathSystemBatch fan-in tables"
+            )
+        if shared:
+            P, L = path_edges.shape
+
+            def fused(rates, prices):
+                fr = jnp.concatenate(
+                    [
+                        jnp.repeat(rates, L, axis=1),
+                        jnp.zeros((n_batch, 1), jnp.float32),
+                    ],
+                    axis=1,
+                )
+                loads = _ordered_fan_in_sum(fr, slot_gather)
+                pr_pad = jnp.concatenate(
+                    [prices, jnp.zeros((n_batch, 1), jnp.float32)], axis=1
+                )
+                costs = _fold_sum(pr_pad[:, path_edges])
+                return loads, costs
+
+            return fused
+        Bt, P, L = path_edges.shape
+
+        def fused(rates, prices):
+            fr = jnp.concatenate(
+                [
+                    jnp.repeat(rates, L, axis=1),
+                    jnp.zeros((Bt, 1), jnp.float32),
+                ],
+                axis=1,
+            )
+            loads = _ordered_fan_in_sum(fr, slot_gather)
+            pr_pad = jnp.concatenate(
+                [prices, jnp.zeros((Bt, 1), jnp.float32)], axis=1
+            )
+            costs = _fold_sum(
+                jnp.take_along_axis(
+                    pr_pad, path_edges.reshape(Bt, P * L), axis=1
+                ).reshape(Bt, P, L)
+            )
+            return loads, costs
+
+        return fused
+    if backend == "scatter":
+        if shared:
+            P, L = path_edges.shape
+            flat = path_edges.reshape(-1)
+
+            def fused(rates, prices):
+                r = jnp.repeat(rates, L, axis=1)  # (Bt, P*L)
+                loads = (
+                    jnp.zeros((n_batch, n_slots + 1), jnp.float32)
+                    .at[:, flat]
+                    .add(r)[:, :n_slots]
+                )
+                pr_pad = jnp.concatenate(
+                    [prices, jnp.zeros((n_batch, 1), jnp.float32)], axis=1
+                )
+                costs = _fold_sum(pr_pad[:, path_edges])
+                return loads, costs
+
+            return fused
+
+        Bt, P, L = path_edges.shape
+        s1 = n_slots + 1
+        flat_idx = (
+            jnp.arange(Bt, dtype=jnp.int32)[:, None, None] * s1 + path_edges
+        ).reshape(-1)
+
+        def fused(rates, prices):
+            r = jnp.repeat(rates.reshape(-1), L)
+            loads = (
+                jnp.zeros((Bt * s1,), jnp.float32)
+                .at[flat_idx]
+                .add(r)
+                .reshape(Bt, s1)[:, :n_slots]
+            )
+            pr_pad = jnp.concatenate(
+                [prices, jnp.zeros((Bt, 1), jnp.float32)], axis=1
+            )
+            costs = _fold_sum(
+                jnp.take_along_axis(
+                    pr_pad, path_edges.reshape(Bt, P * L), axis=1
+                ).reshape(Bt, P, L)
+            )
+            return loads, costs
+
+        return fused
+
+    if backend not in ("dense", "pallas"):
+        raise ValueError(f"unknown congestion backend: {backend!r}")
+    kernel_backend = "pallas" if backend == "pallas" else "auto"
+    if shared:
+        b = dense_incidence(path_edges, n_slots)  # (P, S)
+
+        def fused(rates, prices):
+            # shared incidence: two plain batched matmuls over one B
+            return rates @ b, prices @ b.T
+
+        return fused
+    b3 = jax.vmap(lambda pe: dense_incidence(pe, n_slots))(path_edges)
+
+    def fused(rates, prices):
+        return ops.congestion(b3, rates, prices, backend=kernel_backend)
+
+    return fused
+
+
+def _resolve_backend(
+    backend: str, n_paths: int, n_slots: int, n_batch: int = 1
+) -> str:
     if backend == "auto":
-        return ops.preferred_congestion_backend(n_paths, n_slots)
+        return ops.preferred_congestion_backend(n_paths, n_slots, n_batch=n_batch)
     return backend
 
 
@@ -141,6 +445,7 @@ def _mw_window(
     inv_cap: jnp.ndarray,  # (S,) f32  (1 / capacity per directed slot)
     carry,  # (x, rel_prev, best_alpha, best_x) — see _mw_carry_init
     t0,  # first global iteration index of this window (traced scalar)
+    valid_steps,  # traced scalar: steps that actually advance the iterate
     iters_total: int,  # anneal horizon (the FULL budget, not the window)
     n_steps: int,
     backend: str = "scatter",
@@ -152,6 +457,12 @@ def _mw_window(
     trajectory exactly — which is what lets ``mw_concurrent_flow`` check the
     best-alpha plateau between windows (adaptive iteration count) without
     perturbing the converged-run result.
+
+    ``valid_steps`` is TRACED: steps with ``t - t0 >= valid_steps`` pass the
+    carry through unchanged (masked no-ops).  The adaptive driver always
+    calls with the same static ``n_steps = check_every`` and pads a short
+    final window with no-ops, so one compilation serves the whole solve
+    instead of the last window tracing a fresh scan.
     """
     S = inv_cap.shape[0]
     K = demands.shape[0]
@@ -174,19 +485,22 @@ def _mw_window(
         # (benchmarks/kernels_bench.py mw_vs_lp_quality_128)
         frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters_total)
         tau = jnp.maximum(mx_prev, 1e-12) * frac
-        w = jax.nn.softmax(rel_prev / tau)
+        w = _masked_softmax(rel_prev / tau)
         rates = x * demands[owner]
         loads, costs = fused(rates, w * inv_cap)
         rel = loads * inv_cap  # relative load per directed slot (exact)
         mx = jnp.max(rel)
         alpha = 1.0 / jnp.maximum(mx, 1e-12)
-        better = alpha > best_alpha
-        best_alpha = jnp.where(better, alpha, best_alpha)
-        best_x = jnp.where(better, x, best_x)
+        live = t - t0 < valid_steps
+        take = live & (alpha > best_alpha)
+        best_alpha = jnp.where(take, alpha, best_alpha)
+        best_x = jnp.where(take, x, best_x)
         g = costs * demands[owner]
         g = g / jnp.maximum(jnp.max(g), 1e-12)
         eta = 2.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
-        x = seg_norm(x * jnp.exp(-eta * g))
+        x_next = seg_norm(x * jnp.exp(-eta * g))
+        x = jnp.where(live, x_next, x)
+        rel = jnp.where(live, rel, rel_prev)
         return (x, rel, best_alpha, best_x), None
 
     carry, _ = jax.lax.scan(body, carry, t0 + jnp.arange(n_steps))
@@ -303,16 +617,19 @@ def mw_concurrent_flow(
     adaptive = early_stop or target_alpha is not None
     if not adaptive:
         carry = _mw_window(pe, owner, demands, inv_cap, carry, 0, iters, iters,
-                           backend)
+                           iters, backend)
         done = iters
     else:
         done = 0
         best_prev = 0.0
         stall = 0
         while done < iters:
+            # always trace the same static window length; a short final
+            # window runs `step` live iterations and check_every - step
+            # masked no-ops, so one compilation serves the whole solve
             step = min(check_every, iters - done)
-            carry = _mw_window(pe, owner, demands, inv_cap, carry, done, iters,
-                               step, backend)
+            carry = _mw_window(pe, owner, demands, inv_cap, carry, done, step,
+                               iters, check_every, backend)
             done += step
             best = float(carry[2])  # best alpha so far (exact evaluations)
             if target_alpha is not None and best >= target_alpha:
@@ -332,6 +649,519 @@ def mw_concurrent_flow(
 
 
 # --------------------------------------------------------------------------- #
+# Batched multi-instance MW solver
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class PathSystemBatch:
+    """Pad-and-stack of B independent path systems for one batched MW solve.
+
+    Instances are padded to the common (P_max, L_max, S_max, K_max)
+    envelope:
+
+    * padded SLOTS (beyond an instance's ``n_slots``) carry infinite
+      capacity (``inv_cap`` 0) and are masked out of the softmax via
+      ``slot_valid`` — they contribute zero load, zero price, and zero
+      softmax mass, so per-instance iterates match the unpadded solve;
+    * padded PATH rows belong to a dummy commodity (index K_max) with zero
+      demand: they ship zero rate and see zero gradient, and their split
+      weight normalizes within the dummy commodity only;
+    * an instance's own padding sentinel (its ``n_slots``) lands either on
+      one of its padded slots or, for the widest instance, on the shared
+      garbage slot — harmless either way.
+
+    The shared-topology fast path (``from_shared``) stores ONE (P, L) path
+    table and per-instance demands only — the sweep-over-traffic-matrices
+    case, where stacking B copies of the incidence would be pure waste.
+
+    Construction also precomputes the TRANSPOSED fan-in tables that back
+    the ``gather`` congestion path (the CPU default for batches):
+    ``slot_gather[.., s, :]`` holds the flat positions (``p * L + l``) of
+    every real path hop crossing slot s, and ``owner_gather[.., k, :]`` the
+    path rows of commodity k, both padded with an out-of-range sentinel
+    that gathers a zero.  Slot loads and per-commodity split sums then
+    become vectorized gather+sum instead of XLA scatter-adds (which execute
+    as a serialized element loop on CPU and dominate the scatter backend's
+    iteration).  A skew guard skips the tables when one slot's fan-in would
+    blow the table up past ``_GATHER_TABLE_GUARD`` times the hop count —
+    the driver falls back to ``scatter``.
+    """
+
+    path_edges: np.ndarray  # (B, P, L) int32 — or (P, L) when shared
+    path_owner: np.ndarray  # (B, P) int32 — or (P,) when shared
+    demands: np.ndarray  # (B, K [+ 1 dummy when stacked]) f32
+    inv_cap: np.ndarray  # (B, S) f32, 0 on padded slots — or (S,) shared
+    slot_valid: np.ndarray  # (B, S) bool — or (S,) all-True shared
+    n_paths: np.ndarray  # (B,) true per-instance path counts
+    systems: list  # the original PathSystem objects (result slicing, warm)
+    shared: bool = False
+    # transposed fan-in tables for the gather backend (None: skew guard hit
+    # or a hand-built batch; the solver then falls back to scatter)
+    slot_gather: np.ndarray | None = None  # (B, S, D) int32 — or (S, D)
+    owner_gather: np.ndarray | None = None  # (B, K, D2) int32 — or (K, D2)
+
+    @property
+    def n_batch(self) -> int:
+        return len(self.systems)
+
+    @property
+    def p_max(self) -> int:
+        return self.path_edges.shape[-2]
+
+    @property
+    def s_max(self) -> int:
+        return self.inv_cap.shape[-1]
+
+    @staticmethod
+    def _slot_table(pe2d: np.ndarray, n_slots: int) -> tuple[np.ndarray, np.ndarray]:
+        """(positions-by-slot ragged table as (tab, counts)) for ONE instance.
+
+        ``pe2d`` is that instance's (P, L) padded slot matrix; positions are
+        flat ``p * L + l`` indices into the row-major hop array.  Entries at
+        or beyond ``n_slots`` (padding sentinels) are excluded.
+        """
+        flat = pe2d.reshape(-1)
+        valid = flat < n_slots
+        slots = flat[valid]
+        pos = np.flatnonzero(valid)
+        order = np.argsort(slots, kind="stable")
+        slots_s = slots[order]
+        cnt = np.bincount(slots_s, minlength=n_slots)
+        d = int(cnt.max()) if n_slots else 0
+        if d == 0:
+            return np.zeros((n_slots, 0), np.int32), cnt
+        col = np.arange(len(slots_s)) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+        tab = np.full((n_slots, d), pe2d.size, dtype=np.int32)
+        tab[slots_s, col] = pos[order]
+        return tab, cnt
+
+    @staticmethod
+    def _owner_table(owner: np.ndarray, n_comm: int, n_rows: int) -> np.ndarray:
+        """(K, D2) path-row table for ONE instance's real commodities."""
+        order = np.argsort(owner, kind="stable")
+        cnt = np.bincount(owner, minlength=n_comm)
+        d = int(cnt.max()) if n_comm else 0
+        tab = np.full((n_comm, max(d, 1)), n_rows, dtype=np.int32)
+        if d:
+            col = np.arange(len(owner)) - np.repeat(np.cumsum(cnt) - cnt, cnt)
+            tab[owner[order], col] = order
+        return tab
+
+    @classmethod
+    def from_systems(
+        cls, systems: "Sequence[PathSystem]", bucket: bool = True
+    ) -> "PathSystemBatch":
+        """Stack B (possibly ragged) path systems; empty instances allowed.
+
+        ``bucket=True`` (default) rounds the common envelope up to coarse
+        shape buckets so that successive batches with nearby sizes — the
+        speculative bisection's waves, a sweep's failure stages — reuse one
+        compiled window scan instead of retracing per batch.  All padding
+        is masked, so bucketing never changes results (the composition
+        invariance the wave driver relies on); it trades a bounded slice of
+        extra masked compute for jit-cache hits that otherwise dominate
+        mid-size probe wall-clock.
+        """
+        systems = list(systems)
+        if not systems:
+            raise ValueError("PathSystemBatch needs at least one path system")
+        B = len(systems)
+        P = max(max((ps.n_paths for ps in systems), default=0), 1)
+        L = max(
+            max(
+                (ps.path_edges.shape[1] for ps in systems if ps.n_paths),
+                default=1,
+            ),
+            1,
+        )
+        S = max(max((ps.n_slots for ps in systems), default=0), 1)
+        K = max(ps.n_commodities for ps in systems)
+        if bucket:
+            P, L, S, K = (
+                _bucket_up_geom(P),
+                _bucket_up(L, 4),
+                _bucket_up_geom(S),
+                _bucket_up_geom(K),
+            )
+        pe = np.empty((B, P, L), dtype=np.int32)
+        owner = np.full((B, P), K, dtype=np.int32)  # dummy commodity
+        dem = np.zeros((B, K + 1), dtype=np.float32)
+        inv = np.zeros((B, S), dtype=np.float32)
+        sval = np.zeros((B, S), dtype=bool)
+        for i, ps in enumerate(systems):
+            pe[i, :, :] = ps.n_slots  # instance's own padding sentinel
+            if ps.n_paths:
+                pb, lb = ps.path_edges.shape
+                pe[i, :pb, :lb] = ps.path_edges
+                owner[i, :pb] = ps.path_owner
+            dem[i, : ps.n_commodities] = ps.demands
+            if ps.n_slots:
+                inv[i, : ps.n_slots] = 1.0 / ps.capacities
+                sval[i, : ps.n_slots] = True
+        # transposed fan-in tables (positions use the COMMON (P, L) layout)
+        per = [cls._slot_table(pe[i], ps.n_slots) for i, ps in enumerate(systems)]
+        d = max((t.shape[1] for t, _ in per), default=0)
+        if bucket:
+            d = _bucket_up(max(d, 1), 8)
+        slot_tab: np.ndarray | None = None
+        owner_tab: np.ndarray | None = None
+        if 0 < S * max(d, 1) <= _GATHER_TABLE_GUARD * (P * L + 1):
+            slot_tab = np.full((B, S, max(d, 1)), P * L, dtype=np.int32)
+            for i, (t, _) in enumerate(per):
+                slot_tab[i, : t.shape[0], : t.shape[1]] = t
+            otabs = [
+                cls._owner_table(np.asarray(ps.path_owner), ps.n_commodities, P)
+                if ps.n_paths
+                else None
+                for ps in systems
+            ]
+            d2 = max((t.shape[1] for t in otabs if t is not None), default=1)
+            if bucket:
+                d2 = _bucket_up(d2, 4)
+            owner_tab = np.full((B, K, d2), P, dtype=np.int32)
+            for i, t in enumerate(otabs):
+                if t is not None:
+                    owner_tab[i, : t.shape[0], : t.shape[1]] = t
+        return cls(
+            path_edges=pe,
+            path_owner=owner,
+            demands=dem,
+            inv_cap=inv,
+            slot_valid=sval,
+            n_paths=np.array([ps.n_paths for ps in systems], dtype=np.int64),
+            systems=systems,
+            slot_gather=slot_tab,
+            owner_gather=owner_tab,
+        )
+
+    @classmethod
+    def from_shared(
+        cls, ps: PathSystem, demands: np.ndarray
+    ) -> "PathSystemBatch":
+        """B instances over ONE path system, differing only in demands.
+
+        ``demands`` is (B, n_commodities); the path table, owners, and
+        capacities are stored once and broadcast by the batched window.
+        """
+        dem = np.ascontiguousarray(np.asarray(demands, dtype=np.float32))
+        if dem.ndim != 2 or dem.shape[1] != ps.n_commodities:
+            raise ValueError(
+                f"shared-batch demands must be (B, {ps.n_commodities}); "
+                f"got {dem.shape}"
+            )
+        S = max(ps.n_slots, 1)
+        inv = np.zeros(S, dtype=np.float32)
+        sval = np.zeros(S, dtype=bool)
+        if ps.n_slots:
+            inv[: ps.n_slots] = 1.0 / ps.capacities
+            sval[: ps.n_slots] = True
+        pe = np.asarray(ps.path_edges, dtype=np.int32)
+        owner = np.asarray(ps.path_owner, dtype=np.int32)
+        slot_tab: np.ndarray | None = None
+        owner_tab: np.ndarray | None = None
+        if ps.n_paths:
+            tab, _ = cls._slot_table(pe, ps.n_slots)
+            d = max(tab.shape[1], 1)
+            if S * d <= _GATHER_TABLE_GUARD * (pe.size + 1):
+                slot_tab = np.full((S, d), pe.size, dtype=np.int32)
+                slot_tab[: tab.shape[0], : tab.shape[1]] = tab
+                owner_tab = cls._owner_table(owner, ps.n_commodities, ps.n_paths)
+        return cls(
+            path_edges=pe,
+            path_owner=owner,
+            demands=dem,
+            inv_cap=inv,
+            slot_valid=sval,
+            n_paths=np.full(dem.shape[0], ps.n_paths, dtype=np.int64),
+            systems=[ps] * dem.shape[0],
+            shared=True,
+            slot_gather=slot_tab,
+            owner_gather=owner_tab,
+        )
+
+
+def _empty_path_system() -> PathSystem:
+    """Zero-path filler instance for batch-size bucketing (inactive from the
+    first window; its result row is dropped before returning)."""
+    return PathSystem(
+        n_edges=0,
+        path_edges=np.zeros((0, 1), dtype=np.int32),
+        path_len=np.zeros(0, dtype=np.int32),
+        path_owner=np.zeros(0, dtype=np.int32),
+        demands=np.zeros(0, dtype=np.float32),
+        capacities=np.zeros(0, dtype=np.float32),
+        n_commodities=0,
+    )
+
+
+def _batch_demand_per_path(demands, owner):
+    """(Bt, P) demand of each path's commodity, for either owner rank."""
+    if owner.ndim == 1:  # shared: one owner table, per-instance demands
+        return demands[:, owner]
+    return jnp.take_along_axis(demands, owner, axis=1)
+
+
+def _batch_seg_norm(x, owner, n_comm, owner_gather=None):
+    """Per-instance, per-commodity normalization of split weights.
+
+    With ``owner_gather`` (the gather backend) the per-commodity sums come
+    from the transposed path-row table instead of a scatter-add — summed
+    left-to-right in row order, matching the scatter-add's association
+    bit-exactly.  The dummy commodity's divisor is pinned to 1 (its padded
+    rows never feed anything real, and a true sum there would need the
+    scatter this path avoids).
+    """
+    Bt = x.shape[0]
+    if owner_gather is not None:
+        xp = jnp.concatenate([x, jnp.zeros((Bt, 1), jnp.float32)], axis=1)
+        s = _ordered_fan_in_sum(xp, owner_gather)
+        if owner.ndim == 1:  # shared: no dummy commodity
+            return x / s[:, owner]
+        s = jnp.concatenate([s, jnp.ones((Bt, 1), jnp.float32)], axis=1)
+        return x / jnp.take_along_axis(s, owner, axis=1)
+    if owner.ndim == 1:
+        s = jnp.zeros((Bt, n_comm), jnp.float32).at[:, owner].add(x)
+        return x / s[:, owner]
+    bidx = jnp.arange(Bt)[:, None]
+    s = jnp.zeros((Bt, n_comm), jnp.float32).at[bidx, owner].add(x)
+    return x / jnp.take_along_axis(s, owner, axis=1)
+
+
+@jax.jit
+def _mw_carry_init_batch(x_init, owner, inv_cap, demands):
+    Bt, K = demands.shape
+    S = inv_cap.shape[-1]
+    x0 = _batch_seg_norm(x_init, owner, K)
+    return (
+        x0,
+        jnp.zeros((Bt, S), jnp.float32),
+        jnp.zeros((Bt,), jnp.float32),
+        x0,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("iters_total", "n_steps", "backend"))
+def _mw_window_batch(
+    path_edges,  # (Bt, P, L) int32 — or (P, L) shared
+    owner,  # (Bt, P) int32 — or (P,) shared
+    demands,  # (Bt, K) f32
+    inv_cap,  # (Bt, S) f32 — or (S,) shared
+    slot_valid,  # (Bt, S) bool — or (S,) shared
+    carry,  # (x (Bt,P), rel_prev (Bt,S), best_alpha (Bt,), best_x (Bt,P))
+    t0,  # traced scalar: first global iteration of this window
+    valid_steps,  # traced scalar: live steps this window (rest are no-ops)
+    active,  # (Bt,) bool: instances still iterating (frozen ones pass through)
+    iters_total: int,
+    n_steps: int,
+    backend: str = "scatter",
+    slot_gather=None,  # fan-in tables; required by the gather backend
+    owner_gather=None,
+):
+    """Batched mirror of ``_mw_window``: per-instance masked updates.
+
+    Each batch member runs the SAME per-step recurrence as the sequential
+    window (same anneal, same lagged softmax, same exact alpha bookkeeping),
+    with two masks composed per step: ``t - t0 < valid_steps`` (window
+    padding, satellite of the jit-churn fix) and ``active`` (per-instance
+    early-stop).  A masked step selects the old carry bit-exactly, so a
+    frozen instance's state — and therefore its final result — is identical
+    to stopping its sequential solve at the same window.
+    """
+    Bt, K = demands.shape
+    S = inv_cap.shape[-1]
+    fused = make_congestion_fn_batch(path_edges, S, Bt, backend, slot_gather)
+    seg_tab = owner_gather if backend == "gather" else None
+    dem = _batch_demand_per_path(demands, owner)
+    inv = inv_cap if inv_cap.ndim == 2 else inv_cap[None, :]
+    neg_inf = jnp.float32(-jnp.inf)
+
+    def body(carry, t):
+        x, rel_prev, best_alpha, best_x = carry
+        mx_prev = jnp.max(rel_prev, axis=1)
+        frac = 0.2 * (0.005 / 0.2) ** (t.astype(jnp.float32) / iters_total)
+        tau = jnp.maximum(mx_prev, 1e-12) * frac
+        logits = jnp.where(slot_valid, rel_prev / tau[:, None], neg_inf)
+        w = _masked_softmax(logits)
+        rates = x * dem
+        loads, costs = fused(rates, w * inv)
+        rel = loads * inv
+        mx = jnp.max(rel, axis=1)
+        alpha = 1.0 / jnp.maximum(mx, 1e-12)
+        live = active & (t - t0 < valid_steps)
+        take = live & (alpha > best_alpha)
+        best_alpha = jnp.where(take, alpha, best_alpha)
+        best_x = jnp.where(take[:, None], x, best_x)
+        g = costs * dem
+        g = g / jnp.maximum(jnp.max(g, axis=1, keepdims=True), 1e-12)
+        eta = 2.0 / jnp.sqrt(1.0 + t.astype(jnp.float32))
+        x_next = _batch_seg_norm(x * jnp.exp(-eta * g), owner, K, seg_tab)
+        x = jnp.where(live[:, None], x_next, x)
+        rel = jnp.where(live[:, None], rel, rel_prev)
+        return (x, rel, best_alpha, best_x), None
+
+    carry, _ = jax.lax.scan(body, carry, t0 + jnp.arange(n_steps))
+    return carry
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _mw_final_batch(path_edges, owner, demands, inv_cap, carry,
+                    backend: str = "scatter", slot_gather=None):
+    """Batched mirror of ``_mw_final``: exact last-iterate eval, best result."""
+    Bt, K = demands.shape
+    S = inv_cap.shape[-1]
+    fused = make_congestion_fn_batch(path_edges, S, Bt, backend, slot_gather)
+    dem = _batch_demand_per_path(demands, owner)
+    inv = inv_cap if inv_cap.ndim == 2 else inv_cap[None, :]
+    x, _, best_alpha, best_x = carry
+    rates = x * dem
+    loads, _ = fused(rates, jnp.zeros((Bt, S), jnp.float32))
+    mx = jnp.max(loads * inv, axis=1)
+    alpha = 1.0 / jnp.maximum(mx, 1e-12)
+    better = alpha > best_alpha
+    best_alpha = jnp.where(better, alpha, best_alpha)
+    best_x = jnp.where(better[:, None], x, best_x)
+    best_rates = best_x * dem * jnp.minimum(best_alpha, 1.0)[:, None]
+    return best_alpha, best_rates, 1.0 / best_alpha
+
+
+def mw_concurrent_flow_batch(
+    systems: "PathSystemBatch | Sequence[PathSystem]",
+    iters: int = 400,
+    backend: str = "auto",
+    warm: "Sequence[FlowResult | np.ndarray | None] | None" = None,
+    early_stop: bool = False,
+    check_every: int = 50,
+    rel_tol: float = 1e-3,
+    patience: int = 2,
+    target_alpha: float | None = None,
+) -> list[FlowResult]:
+    """Solve B independent MW instances in ONE batched window scan.
+
+    Accepts a ``PathSystemBatch`` or any sequence of ``PathSystem``s (which
+    is pad-and-stacked on the fly; pass ``PathSystemBatch.from_shared`` to
+    hit the shared-topology fast path).  Per-instance results match
+    ``mw_concurrent_flow`` with the same arguments to float tolerance
+    (bit-exactly under ``backend="scatter"``), and the adaptive state
+    (plateau early-stop, ``target_alpha`` cutoff) is tracked PER INSTANCE:
+    a converged instance's carry is frozen bit-exactly (so
+    ``FlowResult.iters`` agrees exactly with the sequential solve) while
+    the rest of the batch runs on.
+
+    ``backend``: ``"auto"`` (gather tables on CPU, dense/scatter by size on
+    TPU), ``"gather"``, ``"scatter"``, ``"dense"``, or ``"pallas"``.
+
+    ``warm`` is an optional per-instance sequence of predecessor flow
+    results/rate vectors, applied through each instance's ``row_map``
+    exactly as in ``mw_concurrent_flow``.
+    """
+    n_asked: int | None = None
+    if isinstance(systems, PathSystemBatch):
+        batch = systems
+    else:
+        systems = list(systems)
+        n_asked = len(systems)
+        # bucket the batch size too (with masked-out empty fillers), so
+        # probe waves of nearby sizes land on one compiled window scan
+        pad_b = _bucket_up(n_asked, 4) if n_asked > 1 else n_asked
+        if pad_b != n_asked:
+            systems = systems + [
+                _empty_path_system() for _ in range(pad_b - n_asked)
+            ]
+        batch = PathSystemBatch.from_systems(systems)
+    B = batch.n_batch
+    empty = batch.n_paths == 0
+    method_tag = "mw-batch"
+    if bool(empty.all()):
+        out = [FlowResult(0.0, np.zeros(0), np.inf, method_tag, 0)
+               for _ in range(B)]
+        return out if n_asked is None else out[:n_asked]
+    # max(B, 2): even a B=1 batch wants the BATCH backend policy (gather
+    # tables on CPU), not the single-instance dispatch
+    backend = _resolve_backend(backend, batch.p_max, batch.s_max,
+                               n_batch=max(B, 2))
+    if backend == "gather" and batch.slot_gather is None:
+        backend = "scatter"  # skew guard tripped or a hand-built batch
+    method_tag = f"mw-batch-{backend}"
+    slot_tab = (
+        jnp.asarray(batch.slot_gather) if backend == "gather" else None
+    )
+    owner_tab = (
+        jnp.asarray(batch.owner_gather)
+        if backend == "gather" and batch.owner_gather is not None
+        else None
+    )
+    x_init = np.ones((B, batch.p_max), dtype=np.float32)
+    if warm is not None:
+        for i, (ps, w) in enumerate(zip(batch.systems, warm)):
+            if w is not None and ps.row_map is not None and ps.n_paths:
+                x_init[i, : ps.n_paths] = _warm_split(ps, w)
+    pe = jnp.asarray(batch.path_edges)
+    owner = jnp.asarray(batch.path_owner)
+    demands = jnp.asarray(batch.demands)
+    inv_cap = jnp.asarray(batch.inv_cap)
+    slot_valid = jnp.asarray(batch.slot_valid)
+    carry = _mw_carry_init_batch(jnp.asarray(x_init), owner, inv_cap, demands)
+    done = np.zeros(B, dtype=np.int64)
+    active = ~empty
+    adaptive = early_stop or target_alpha is not None
+    if not adaptive:
+        carry = _mw_window_batch(
+            pe, owner, demands, inv_cap, slot_valid, carry, 0, iters,
+            jnp.asarray(active), iters, iters, backend, slot_tab, owner_tab,
+        )
+        done[active] = iters
+    else:
+        best_prev = np.zeros(B)
+        stall = np.zeros(B, dtype=np.int64)
+        t0 = 0
+        while t0 < iters and active.any():
+            step = min(check_every, iters - t0)
+            carry = _mw_window_batch(
+                pe, owner, demands, inv_cap, slot_valid, carry, t0, step,
+                jnp.asarray(active), iters, check_every, backend, slot_tab,
+                owner_tab,
+            )
+            t0 += step
+            done[active] += step
+            best = np.asarray(carry[2])
+            for b in np.flatnonzero(active):
+                # identical decision sequence to mw_concurrent_flow's
+                # window loop, applied per instance
+                if target_alpha is not None and best[b] >= target_alpha:
+                    active[b] = False
+                    continue
+                if early_stop:
+                    if best[b] - best_prev[b] < rel_tol * max(best[b], 1e-12):
+                        stall[b] += 1
+                        if stall[b] >= patience:
+                            active[b] = False
+                            continue
+                    else:
+                        stall[b] = 0
+                    best_prev[b] = max(best[b], best_prev[b])
+    alpha, rates, max_load = _mw_final_batch(
+        pe, owner, demands, inv_cap, carry, backend, slot_tab
+    )
+    alpha = np.asarray(alpha)
+    rates = np.asarray(rates)
+    max_load = np.asarray(max_load)
+    out = []
+    for b in range(B):
+        if empty[b]:
+            out.append(FlowResult(0.0, np.zeros(0), np.inf, method_tag, 0))
+        else:
+            nb = int(batch.n_paths[b])
+            out.append(
+                FlowResult(
+                    float(alpha[b]), rates[b, :nb].copy(),
+                    float(max_load[b]), method_tag, int(done[b]),
+                )
+            )
+    return out if n_asked is None else out[:n_asked]
+
+
+# --------------------------------------------------------------------------- #
 # Exact LP solvers (scipy / HiGHS)
 # --------------------------------------------------------------------------- #
 
@@ -345,21 +1175,34 @@ def lp_concurrent_flow(ps: PathSystem, alpha_cap: float = 8.0) -> FlowResult:
     if P == 0:
         return FlowResult(0.0, np.zeros(0), np.inf, "lp")
     E, K = ps.n_slots, ps.n_commodities
-    rows, cols, vals = [], [], []
-    # directed-slot capacity rows
-    for p in range(P):
-        for e in ps.path_edges[p][: ps.path_len[p]]:
-            rows.append(int(e))
-            cols.append(p)
-            vals.append(1.0)
-    # commodity rows: alpha * d_i - sum_p r_p <= 0
-    for p in range(P):
-        rows.append(E + int(ps.path_owner[p]))
-        cols.append(p)
-        vals.append(-1.0)
-    rows.extend(E + np.arange(K))
-    cols.extend([P] * K)
-    vals.extend(ps.demands.astype(np.float64))
+    # COO assembly in three vectorized strips (the per-path Python loops
+    # dominated LP setup on mid-size instances):
+    #   directed-slot capacity rows — one entry per real hop,
+    #   commodity rows (alpha * d_i - sum_p r_p <= 0),
+    #   the alpha column.
+    lens = ps.path_len.astype(np.int64)
+    hop_mask = np.arange(ps.path_edges.shape[1])[None, :] < lens[:, None]
+    rows = np.concatenate(
+        [
+            ps.path_edges[hop_mask].astype(np.int64),  # row-major: path order
+            E + ps.path_owner.astype(np.int64),
+            E + np.arange(K, dtype=np.int64),
+        ]
+    )
+    cols = np.concatenate(
+        [
+            np.repeat(np.arange(P, dtype=np.int64), lens),
+            np.arange(P, dtype=np.int64),
+            np.full(K, P, dtype=np.int64),
+        ]
+    )
+    vals = np.concatenate(
+        [
+            np.ones(int(lens.sum())),
+            -np.ones(P),
+            ps.demands.astype(np.float64),
+        ]
+    )
     A = sp.coo_matrix((vals, (rows, cols)), shape=(E + K, P + 1)).tocsr()
     b = np.concatenate([ps.capacities.astype(np.float64), np.zeros(K)])
     c = np.zeros(P + 1)
@@ -385,47 +1228,41 @@ def lp_edge_concurrent_flow(top, comm, alpha_cap: float = 8.0) -> float:
     N = top.n_switches
     E2 = 2 * top.n_edges  # directed copies (full-duplex: unit cap per direction)
     K = comm.k
-    src, dst, dem = comm.src, comm.dst, comm.demand
+    src = np.asarray(comm.src, dtype=np.int64)
+    dst = np.asarray(comm.dst, dtype=np.int64)
+    dem = np.asarray(comm.demand, dtype=np.float64)
     # directed edge list
     de = np.concatenate([top.edges, top.edges[:, ::-1]], axis=0)  # (E2, 2)
     nvar = K * E2 + 1
-    rows, cols, vals = [], [], []
-    beq = []
-    # flow conservation per commodity per node (except via demand at src/dst)
-    r = 0
-    for i in range(K):
-        for v in range(N):
-            # sum_out - sum_in - alpha*d*(v==src) + alpha*d*(v==dst) = 0
-            out_ids = np.flatnonzero(de[:, 0] == v)
-            in_ids = np.flatnonzero(de[:, 1] == v)
-            for j in out_ids:
-                rows.append(r)
-                cols.append(i * E2 + j)
-                vals.append(1.0)
-            for j in in_ids:
-                rows.append(r)
-                cols.append(i * E2 + j)
-                vals.append(-1.0)
-            coef = 0.0
-            if v == src[i]:
-                coef = -dem[i]
-            elif v == dst[i]:
-                coef = dem[i]
-            if coef != 0.0:
-                rows.append(r)
-                cols.append(nvar - 1)
-                vals.append(coef)
-            beq.append(0.0)
-            r += 1
-    Aeq = sp.coo_matrix((vals, (rows, cols)), shape=(r, nvar)).tocsr()
+    # flow conservation per commodity per node: row i*N + v holds
+    # sum_out - sum_in - alpha*d*(v==src_i) + alpha*d*(v==dst_i) = 0.
+    # Assembled with index arithmetic over the (commodity x directed-edge)
+    # grid — the per-commodity flatnonzero scans were O(K * N * E2).
+    i_rep = np.repeat(np.arange(K, dtype=np.int64), E2)
+    ee = np.tile(np.arange(E2, dtype=np.int64), K)
+    var_cols = i_rep * E2 + ee
+    out_rows = i_rep * N + np.tile(de[:, 0].astype(np.int64), K)
+    in_rows = i_rep * N + np.tile(de[:, 1].astype(np.int64), K)
+    # alpha-column entries: -d at the source row, +d at the destination row
+    # (destination only when distinct, matching the src-first branch order)
+    ndd = dst != src
+    rows = np.concatenate(
+        [out_rows, in_rows, np.arange(K) * N + src, np.arange(K)[ndd] * N + dst[ndd]]
+    )
+    cols = np.concatenate(
+        [var_cols, var_cols,
+         np.full(K, nvar - 1, dtype=np.int64),
+         np.full(int(ndd.sum()), nvar - 1, dtype=np.int64)]
+    )
+    vals = np.concatenate(
+        [np.ones(K * E2), -np.ones(K * E2), -dem, dem[ndd]]
+    )
+    Aeq = sp.coo_matrix((vals, (rows, cols)), shape=(K * N, nvar)).tocsr()
+    beq = np.zeros(K * N)
     # capacity rows: each DIRECTED edge has unit capacity (full duplex)
-    rows2, cols2, vals2 = [], [], []
-    for e in range(E2):
-        for i in range(K):
-            rows2.append(e)
-            cols2.append(i * E2 + e)
-            vals2.append(1.0)
-    A_ub = sp.coo_matrix((vals2, (rows2, cols2)), shape=(E2, nvar)).tocsr()
+    A_ub = sp.coo_matrix(
+        (np.ones(K * E2), (ee, var_cols)), shape=(E2, nvar)
+    ).tocsr()
     b_ub = np.ones(E2)
     c = np.zeros(nvar)
     c[-1] = -1.0
@@ -445,8 +1282,13 @@ _LP_FALLBACK_ERRORS = (RuntimeError, ValueError, ImportError)
 
 
 def throughput(ps: PathSystem, method: str = "auto", iters: int = 400) -> FlowResult:
-    """Concurrent-flow throughput with automatic solver selection."""
-    if method == "lp" or (method == "auto" and ps.n_paths <= 20000):
+    """Concurrent-flow throughput with automatic solver selection.
+
+    ``auto`` dispatches to the exact LP at or below ``LP_PATH_LIMIT`` path
+    variables (20000 by default; override with ``REPRO_LP_PATH_LIMIT``) and
+    to the MW solver beyond it.
+    """
+    if method == "lp" or (method == "auto" and ps.n_paths <= LP_PATH_LIMIT):
         try:
             return lp_concurrent_flow(ps)
         except _LP_FALLBACK_ERRORS as exc:

@@ -38,7 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .flow import _resolve_backend, make_congestion_fn
+from .flow import _resolve_backend, _warm_split, make_congestion_fn
 from .routing import PathSystem
 
 __all__ = ["MptcpResult", "mptcp_throughput"]
@@ -50,6 +50,7 @@ class MptcpResult:
     mean_throughput: float
     jain_index: float
     iters: int
+    rates: np.ndarray | None = None  # (P,) per-path rates; feeds warm starts
 
     def summary(self) -> str:
         return (
@@ -61,7 +62,7 @@ class MptcpResult:
 @functools.partial(jax.jit, static_argnames=("iters", "backend"))
 def _pf_solve(
     path_edges, owner, demands, caps, n_comm: int, iters: int,
-    backend: str = "scatter",
+    backend: str = "scatter", r_init=None,
 ):
     """Kelly-style dual (link-price) iteration for coupled multipath PF.
 
@@ -108,9 +109,13 @@ def _pf_solve(
         return (p, r, r_avg, n_avg), None
 
     p0 = jnp.full((E,), 0.1, jnp.float32)
-    # seed the lagged rates with the response to the initial prices
-    _, q0 = fused(jnp.zeros((P,), jnp.float32), p0)
-    r0 = response(q0)
+    # seed the lagged rates with the response to the initial prices — or,
+    # warm-starting from a predecessor allocation, with its mapped rates
+    if r_init is None:
+        _, q0 = fused(jnp.zeros((P,), jnp.float32), p0)
+        r0 = response(q0)
+    else:
+        r0 = r_init
     (p, r_last, r_avg, n_avg), _ = jax.lax.scan(
         body, (p0, r0, jnp.zeros((P,), jnp.float32), jnp.float32(0.0)),
         jnp.arange(iters), length=iters,
@@ -126,12 +131,25 @@ def _pf_solve(
 
 
 def mptcp_throughput(
-    ps: PathSystem, iters: int = 2000, backend: str = "auto"
+    ps: PathSystem,
+    iters: int = 2000,
+    backend: str = "auto",
+    warm: "MptcpResult | np.ndarray | None" = None,
 ) -> MptcpResult:
+    """Fluid MPTCP throughput; ``warm`` seeds the price iteration's lagged
+    rates from a predecessor allocation through ``ps.row_map`` (set by
+    ``routing.update_path_system``) — the same plumbing as the MW solver's
+    warm start, for expansion/failure sweeps that chain path-system deltas.
+    """
     if ps.n_paths == 0:
-        return MptcpResult(np.zeros(0), 0.0, 1.0, 0)
+        return MptcpResult(np.zeros(0), 0.0, 1.0, 0, np.zeros(0))
     backend = _resolve_backend(backend, ps.n_paths, ps.n_slots)
-    x, _ = _pf_solve(
+    r_init = None
+    if warm is not None and ps.row_map is not None:
+        prev = warm.rates if isinstance(warm, MptcpResult) else warm
+        if prev is not None and len(prev):
+            r_init = jnp.asarray(_warm_split(ps, np.asarray(prev)))
+    x, r = _pf_solve(
         jnp.asarray(ps.path_edges),
         jnp.asarray(ps.path_owner),
         jnp.asarray(ps.demands, dtype=jnp.float32),
@@ -139,9 +157,10 @@ def mptcp_throughput(
         ps.n_commodities,
         iters,
         backend,
+        r_init,
     )
     x = np.asarray(x)
     norm = x / np.maximum(ps.demands, 1e-9)
     # Jain's fairness index over per-commodity normalized throughput
     jain = float((norm.sum() ** 2) / (len(norm) * (norm**2).sum() + 1e-12))
-    return MptcpResult(norm, float(norm.mean()), jain, iters)
+    return MptcpResult(norm, float(norm.mean()), jain, iters, np.asarray(r))

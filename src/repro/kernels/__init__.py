@@ -2,7 +2,11 @@
 
 - ``minplus``    — tropical (min,+) matmul: APSP by matrix powering (Fig 4).
 - ``power``      — blocked MXU matmul: spectral bisection power iteration (Fig 1/6).
-- ``congestion`` — fused (B^T r, B w): the multicommodity-flow inner loop (Fig 1c/8/9).
+- ``congestion`` — fused (B^T r, B w): the multicommodity-flow inner loop
+  (Fig 1c/8/9).  Also accepts a stacked rank-3 (Bt, P, E) incidence — one
+  fused tile pass per batch member — the TPU inner loop of
+  ``core.flow.mw_concurrent_flow_batch`` (on CPU the batch solver instead
+  uses its precomputed gather fan-in tables; see ``core.flow``).
 
 ``ops`` holds the jit'd dispatch wrappers (kernel on TPU, jnp oracle on CPU),
 ``ref`` the pure-jnp oracles used as ground truth in tests.

@@ -18,6 +18,14 @@ Grid: (P/bp, E/be), E innermost.
   loads tile (1, be)  accumulates across the P-blocks  (init at pi == 0)
   costs tile (bp, 1)  accumulates across the E-blocks  (init at ei == 0)
 Both accumulators are single-tile VMEM residents; B tiles are (bp, be).
+
+Batched form: a stacked rank-3 incidence (Bt, P, E) with (Bt, P) rates and
+(Bt, E) prices runs the same kernel under a (Bt, P/bp, E/be) grid — the
+batch dimension is outermost, so each batch member still makes exactly one
+pass over its own B tiles per call and the accumulator tiles reset when the
+grid advances to the next member (pi == 0 / ei == 0 hold at each member's
+first visit).  This is the inner loop of ``core.flow.mw_concurrent_flow_batch``
+on TPU: Bt independent MW instances per iteration with one fused launch.
 """
 
 from __future__ import annotations
@@ -28,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["congestion_pallas", "congestion_kernel"]
+__all__ = ["congestion_pallas", "congestion_kernel", "congestion_batch_kernel"]
 
 
 def congestion_kernel(b_ref, r_ref, w_ref, loads_ref, costs_ref):
@@ -52,20 +60,86 @@ def congestion_kernel(b_ref, r_ref, w_ref, loads_ref, costs_ref):
     costs_ref[...] += jnp.dot(b, w.T, preferred_element_type=costs_ref.dtype)
 
 
+def congestion_batch_kernel(b_ref, r_ref, w_ref, loads_ref, costs_ref):
+    """Per-batch-member fused pass; grid (Bt, P/bp, E/be), E innermost."""
+    pi = pl.program_id(1)
+    ei = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init_loads():
+        loads_ref[...] = jnp.zeros_like(loads_ref)
+
+    @pl.when(ei == 0)
+    def _init_costs():
+        costs_ref[...] = jnp.zeros_like(costs_ref)
+
+    b = b_ref[0]  # (bp, be)
+    r = r_ref[0]  # (1, bp)
+    w = w_ref[0]  # (1, be)
+    loads_ref[0, ...] += jnp.dot(r, b, preferred_element_type=loads_ref.dtype)
+    costs_ref[0, ...] += jnp.dot(b, w.T, preferred_element_type=costs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "be", "interpret"))
+def _congestion_pallas_batch(
+    incidence: jax.Array,  # (Bt, P, E) {0,1}
+    rates: jax.Array,  # (Bt, P)
+    prices: jax.Array,  # (Bt, E)
+    bp: int = 128,
+    be: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Bt, P, E = incidence.shape
+    pp, ep = (-P) % bp, (-E) % be
+    b_p = jnp.pad(incidence.astype(jnp.float32), ((0, 0), (0, pp), (0, ep)))
+    r_p = jnp.pad(rates.astype(jnp.float32), ((0, 0), (0, pp)))[:, None, :]
+    w_p = jnp.pad(prices.astype(jnp.float32), ((0, 0), (0, ep)))[:, None, :]
+    _, Pp, Ep = b_p.shape
+    loads, costs = pl.pallas_call(
+        congestion_batch_kernel,
+        grid=(Bt, Pp // bp, Ep // be),
+        in_specs=[
+            pl.BlockSpec((1, bp, be), lambda bi, pi, ei: (bi, pi, ei)),
+            pl.BlockSpec((1, 1, bp), lambda bi, pi, ei: (bi, 0, pi)),
+            pl.BlockSpec((1, 1, be), lambda bi, pi, ei: (bi, 0, ei)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, be), lambda bi, pi, ei: (bi, 0, ei)),
+            pl.BlockSpec((1, bp, 1), lambda bi, pi, ei: (bi, pi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, 1, Ep), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, Pp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(b_p, r_p, w_p)
+    return loads[:, 0, :E], costs[:, :P, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("bp", "be", "interpret"))
 def congestion_pallas(
-    incidence: jax.Array,  # (P, E) {0,1}
-    rates: jax.Array,  # (P,)
-    prices: jax.Array,  # (E,)
+    incidence: jax.Array,  # (P, E) {0,1}, or stacked (Bt, P, E)
+    rates: jax.Array,  # (P,), or (Bt, P)
+    prices: jax.Array,  # (E,), or (Bt, E)
     bp: int = 128,
     be: int = 128,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (loads (E,), costs (P,)) = (B^T r, B w), fused single pass.
 
+    A rank-3 ``incidence`` (with matching rank-2 rates/prices) computes Bt
+    independent products under a (Bt, P/bp, E/be) grid — see the module
+    docstring — returning (Bt, E) loads and (Bt, P) costs.
+
     ``interpret=None`` (default) auto-detects: compiled on TPU, interpreter
     elsewhere.  Pass an explicit bool to override.
     """
+    if incidence.ndim == 3:
+        return _congestion_pallas_batch(
+            incidence, rates, prices, bp=bp, be=be, interpret=interpret
+        )
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     P, E = incidence.shape

@@ -31,10 +31,22 @@ def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
 def congestion_ref(
     incidence: jax.Array, rates: jax.Array, prices: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
-    """(loads, costs) = (B^T r, B w), unfused reference."""
+    """(loads, costs) = (B^T r, B w), unfused reference.
+
+    Accepts either a single (P, E) incidence with (P,) rates / (E,) prices,
+    or a stacked rank-3 (Bt, P, E) incidence with (Bt, P) rates and (Bt, E)
+    prices — one independent product per batch member (the batched MW
+    solver's dense path).
+    """
     b = incidence.astype(jnp.float32)
-    loads = rates.astype(jnp.float32) @ b
-    costs = b @ prices.astype(jnp.float32)
+    r = rates.astype(jnp.float32)
+    w = prices.astype(jnp.float32)
+    if b.ndim == 3:
+        loads = jnp.einsum("bp,bpe->be", r, b)
+        costs = jnp.einsum("bpe,be->bp", b, w)
+        return loads, costs
+    loads = r @ b
+    costs = b @ w
     return loads, costs
 
 

@@ -1,0 +1,350 @@
+"""Batched MW solver + speculative bisection validation.
+
+Parity contract: ``mw_concurrent_flow_batch`` reproduces per-instance
+``mw_concurrent_flow`` results — bit-exactly on the scatter backend (same
+accumulation order) and on the gather backend (ordered fan-in sums match
+the scatter association), including EXACT per-instance iteration counts
+under the frozen-instance adaptive early-stop.  Plus ragged/empty/B=1
+batches, the shared-topology fast path, the jit-churn window padding, the
+speculative bisection's sequential-equality guarantee, the
+REPRO_LP_PATH_LIMIT import validation, and the MPTCP warm start.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PathSystemBatch,
+    build_path_system,
+    jellyfish,
+    max_feasible,
+    mw_concurrent_flow,
+    mw_concurrent_flow_batch,
+    random_permutation_traffic,
+    speculative_max_feasible,
+)
+from repro.core.routing import PathSystem
+
+
+def _systems(sizes, k=4, seed=3):
+    out = []
+    for i, n in enumerate(sizes):
+        top = jellyfish(n, 10, 6, seed=i)
+        out.append(
+            build_path_system(top, random_permutation_traffic(top, seed=seed), k=k)
+        )
+    return out
+
+
+def _empty_system():
+    return PathSystem(
+        n_edges=0,
+        path_edges=np.zeros((0, 1), np.int32),
+        path_len=np.zeros(0, np.int32),
+        path_owner=np.zeros(0, np.int32),
+        demands=np.zeros(0, np.float32),
+        capacities=np.zeros(0, np.float32),
+        n_commodities=0,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# batched-vs-sequential parity
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["scatter", "gather", "dense"])
+def test_batch_matches_sequential_fixed_budget(backend):
+    systems = _systems((24, 40, 32))
+    seq = [mw_concurrent_flow(ps, iters=120, backend="scatter") for ps in systems]
+    bat = mw_concurrent_flow_batch(systems, iters=120, backend=backend)
+    for s, b in zip(seq, bat):
+        assert abs(s.alpha - b.alpha) <= 1e-5 * max(s.alpha, 1.0)
+        assert s.iters == b.iters == 120
+        # dense reassociates the incidence products (einsum), so its
+        # trajectory drifts at float tolerance; scatter/gather are bit-exact
+        tol = dict(rtol=5e-3, atol=1e-4) if backend == "dense" else dict(
+            rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(s.rates, b.rates, **tol)
+
+
+@pytest.mark.parametrize("backend", ["scatter", "gather"])
+def test_batch_bit_exact_order_preserving_backends(backend):
+    """scatter and gather reproduce the sequential accumulation order, so
+    alpha agreement is BIT-level, not just tolerance-level."""
+    systems = _systems((40, 60))
+    seq = [mw_concurrent_flow(ps, iters=150, backend="scatter") for ps in systems]
+    bat = mw_concurrent_flow_batch(systems, iters=150, backend=backend)
+    for s, b in zip(seq, bat):
+        assert s.alpha == b.alpha
+
+
+def test_batch_adaptive_iteration_counts_agree_exactly():
+    """Frozen-instance early-stop: every instance stops at the same window
+    (same iteration count) its sequential adaptive solve would."""
+    systems = _systems((24, 40, 60, 32))
+    kw = dict(iters=300, early_stop=True, check_every=25, target_alpha=0.55)
+    seq = [mw_concurrent_flow(ps, backend="scatter", **kw) for ps in systems]
+    bat = mw_concurrent_flow_batch(systems, backend="gather", **kw)
+    iters = sorted(b.iters for b in bat)
+    assert iters[0] < iters[-1], "sizes chosen so freeze windows differ"
+    for s, b in zip(seq, bat):
+        assert s.iters == b.iters
+        assert s.alpha == b.alpha
+
+
+def test_batch_plateau_early_stop_agrees():
+    systems = _systems((24, 40))
+    kw = dict(iters=400, early_stop=True, check_every=50, rel_tol=5e-3,
+              patience=1)
+    seq = [mw_concurrent_flow(ps, backend="scatter", **kw) for ps in systems]
+    bat = mw_concurrent_flow_batch(systems, backend="gather", **kw)
+    for s, b in zip(seq, bat):
+        assert s.iters == b.iters
+        assert abs(s.alpha - b.alpha) <= 1e-6
+
+
+def test_batch_warm_start_matches_sequential():
+    from repro.core import fail_links, update_path_system
+
+    tops = [jellyfish(n, 10, 6, seed=7 + i) for i, n in enumerate((40, 50))]
+    comms = [random_permutation_traffic(t, seed=1) for t in tops]
+    systems = [build_path_system(t, c, k=4) for t, c in zip(tops, comms)]
+    warms = [mw_concurrent_flow(ps, iters=80) for ps in systems]
+    failed = [fail_links(t, n_links=3, seed=9) for t in tops]
+    deltas = [
+        update_path_system(ps, t, f, c)
+        for ps, t, f, c in zip(systems, tops, failed, comms)
+    ]
+    seq = [
+        mw_concurrent_flow(ps, iters=60, backend="scatter", warm=w)
+        for ps, w in zip(deltas, warms)
+    ]
+    bat = mw_concurrent_flow_batch(deltas, iters=60, backend="gather",
+                                   warm=warms)
+    for s, b in zip(seq, bat):
+        assert s.alpha == b.alpha
+
+
+# --------------------------------------------------------------------------- #
+# ragged batches, padding edge cases
+# --------------------------------------------------------------------------- #
+
+
+def test_batch_with_empty_instance():
+    systems = _systems((24, 40))
+    mixed = [systems[0], _empty_system(), systems[1]]
+    bat = mw_concurrent_flow_batch(mixed, iters=80)
+    assert bat[1].alpha == 0.0 and len(bat[1].rates) == 0 and bat[1].iters == 0
+    for ps, b in zip((systems[0], systems[1]), (bat[0], bat[2])):
+        s = mw_concurrent_flow(ps, iters=80, backend="scatter")
+        assert abs(s.alpha - b.alpha) <= 1e-6
+        assert len(b.rates) == ps.n_paths
+
+
+def test_batch_all_empty():
+    out = mw_concurrent_flow_batch([_empty_system(), _empty_system()], iters=50)
+    assert all(r.alpha == 0.0 and r.iters == 0 for r in out)
+
+
+def test_batch_of_one():
+    (ps,) = _systems((40,))
+    s = mw_concurrent_flow(ps, iters=100, backend="scatter")
+    (b,) = mw_concurrent_flow_batch([ps], iters=100)
+    assert s.alpha == b.alpha
+    np.testing.assert_allclose(s.rates, b.rates, rtol=1e-6, atol=1e-7)
+
+
+def test_batch_result_independent_of_composition():
+    """Padding envelope (who else is in the batch) must not change an
+    instance's result — the wave driver relies on this."""
+    systems = _systems((24, 60, 32))
+    alone = mw_concurrent_flow_batch([systems[0]], iters=120)[0]
+    grouped = mw_concurrent_flow_batch(systems, iters=120)[0]
+    assert alone.alpha == grouped.alpha
+
+
+def test_pathsystembatch_gather_tables_cover_real_hops():
+    systems = _systems((24, 40))
+    batch = PathSystemBatch.from_systems(systems)
+    assert batch.slot_gather is not None and batch.owner_gather is not None
+    B, S, D = batch.slot_gather.shape
+    P, L = batch.path_edges.shape[1:]
+    for i, ps in enumerate(systems):
+        real = int((batch.slot_gather[i] < P * L).sum())
+        hops = int(ps.path_len.sum())
+        assert real == hops  # every real hop appears exactly once
+
+
+# --------------------------------------------------------------------------- #
+# shared-topology fast path
+# --------------------------------------------------------------------------- #
+
+
+def test_shared_batch_matches_sequential():
+    (ps,) = _systems((48,))
+    rng = np.random.default_rng(0)
+    dems = np.stack(
+        [
+            ps.demands * (0.5 + rng.random(ps.n_commodities).astype(np.float32))
+            for _ in range(3)
+        ]
+    )
+    shared = PathSystemBatch.from_shared(ps, dems)
+    assert shared.shared and shared.path_edges.ndim == 2
+    bat = mw_concurrent_flow_batch(shared, iters=100)
+    for d, b in zip(dems, bat):
+        s = mw_concurrent_flow(
+            dataclasses.replace(ps, demands=d), iters=100, backend="scatter"
+        )
+        assert s.alpha == b.alpha
+
+
+def test_shared_batch_rejects_bad_demands():
+    (ps,) = _systems((24,))
+    with pytest.raises(ValueError, match="shared-batch demands"):
+        PathSystemBatch.from_shared(ps, np.ones((2, ps.n_commodities + 1)))
+
+
+# --------------------------------------------------------------------------- #
+# jit-churn fix: padded final window is a masked no-op
+# --------------------------------------------------------------------------- #
+
+
+def test_adaptive_window_padding_is_bit_exact():
+    """iters not a multiple of check_every: the padded final window must
+    reproduce the single-scan trajectory bit-exactly."""
+    (ps,) = _systems((40,))
+    full = mw_concurrent_flow(ps, iters=130)
+    # never stops early (patience huge), so the windowed run covers the
+    # same 130 live steps: 50 + 50 + (30 live + 20 masked no-ops)
+    windowed = mw_concurrent_flow(
+        ps, iters=130, early_stop=True, check_every=50, rel_tol=0.0,
+        patience=10**9,
+    )
+    assert windowed.iters == 130
+    assert windowed.alpha == full.alpha
+    np.testing.assert_array_equal(windowed.rates, full.rates)
+
+
+def test_adaptive_single_compilation_per_solve():
+    """The short final window must reuse the full window's compilation."""
+    from repro.core import flow
+
+    (ps,) = _systems((32,))
+    mw_concurrent_flow(ps, iters=130, early_stop=True, check_every=50,
+                       rel_tol=0.0, patience=10**9)
+    base = flow._mw_window._cache_size()
+    mw_concurrent_flow(ps, iters=130, early_stop=True, check_every=50,
+                       rel_tol=0.0, patience=10**9)
+    assert flow._mw_window._cache_size() == base
+
+
+# --------------------------------------------------------------------------- #
+# speculative bisection
+# --------------------------------------------------------------------------- #
+
+
+def test_speculative_equals_sequential_monotone():
+    for thresh in (0, 1, 137, 999, 1000):
+        ok = lambda m: m <= thresh
+        ok_b = lambda ms: [ok(m) for m in ms]
+        for levels in (1, 2, 3, 5):
+            assert speculative_max_feasible(0, 1000, ok_b, levels=levels) == \
+                max_feasible(0, 1000, ok)
+
+
+def test_speculative_equals_sequential_nonmonotone():
+    """The wave replays the exact bisection descent, so even a noisy,
+    NON-monotone predicate lands on the sequential answer."""
+    rng = np.random.default_rng(5)
+    table = rng.random(2049) < 0.5
+    ok = lambda m: bool(table[m])
+    ok_b = lambda ms: [ok(m) for m in ms]
+    for lo, hi in [(0, 2048), (100, 1100), (7, 8), (3, 3)]:
+        want = max_feasible(lo, hi, ok)
+        for levels in (2, 4):
+            assert speculative_max_feasible(lo, hi, ok_b, levels=levels) == want
+
+
+def test_speculative_wave_rounds():
+    calls = {"n": 0, "max_cands": 0}
+
+    def ok_b(ms):
+        calls["n"] += 1
+        calls["max_cands"] = max(calls["max_cands"], len(ms))
+        return [m <= 300 for m in ms]
+
+    speculative_max_feasible(0, 1023, ok_b, levels=2)
+    assert calls["n"] == 5  # ceil(10 levels / 2)
+    assert calls["max_cands"] <= 3  # 2**2 - 1
+
+    with pytest.raises(ValueError, match="levels"):
+        speculative_max_feasible(0, 10, ok_b, levels=0)
+
+
+def test_speculative_bisection_end_to_end_equal():
+    """fig1c-style searches (MW probes) agree across drivers."""
+    from benchmarks.common import max_servers_at_full_capacity
+
+    kw = dict(seeds=(0,), k=4, method="mw", n_matrices=2)
+    seq = max_servers_at_full_capacity(12, 8, 10, 30, **kw)
+    wave = max_servers_at_full_capacity(12, 8, 10, 30, wave_levels=2, **kw)
+    assert seq == wave
+
+
+# --------------------------------------------------------------------------- #
+# REPRO_LP_PATH_LIMIT (import-time validation) and throughput dispatch
+# --------------------------------------------------------------------------- #
+
+
+def test_lp_path_limit_env_validated_at_import():
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for bad in ("twenty", "-5"):
+        env = dict(os.environ, REPRO_LP_PATH_LIMIT=bad)
+        env["PYTHONPATH"] = str(root / "src")
+        proc = subprocess.run(
+            [sys.executable, "-c", "import repro.core.flow"],
+            env=env, capture_output=True, text=True, cwd=str(root),
+        )
+        assert proc.returncode != 0
+        assert "REPRO_LP_PATH_LIMIT" in proc.stderr
+
+
+def test_lp_path_limit_steers_throughput(monkeypatch):
+    from repro.core import flow, throughput
+
+    (ps,) = _systems((24,))
+    monkeypatch.setattr(flow, "LP_PATH_LIMIT", ps.n_paths)
+    assert throughput(ps, iters=40).method == "lp"
+    monkeypatch.setattr(flow, "LP_PATH_LIMIT", ps.n_paths - 1)
+    assert throughput(ps, iters=40).method.startswith("mw")
+
+
+# --------------------------------------------------------------------------- #
+# MPTCP warm start
+# --------------------------------------------------------------------------- #
+
+
+def test_mptcp_warm_start_plumbing():
+    from repro.core import fail_links, mptcp_throughput, update_path_system
+
+    top = jellyfish(40, 10, 6, seed=2)
+    comm = random_permutation_traffic(top, seed=1)
+    ps = build_path_system(top, comm, k=4)
+    base = mptcp_throughput(ps, iters=400)
+    assert base.rates is not None and len(base.rates) == ps.n_paths
+    delta = update_path_system(ps, top, fail_links(top, n_links=2, seed=3), comm)
+    warm = mptcp_throughput(delta, iters=400, warm=base)
+    cold = mptcp_throughput(delta, iters=400)
+    # warm start changes the transient, not the equilibrium quality
+    assert abs(warm.mean_throughput - cold.mean_throughput) < 0.05
+    assert warm.rates is not None and len(warm.rates) == delta.n_paths

@@ -81,6 +81,47 @@ def test_congestion_matches_ref(pe, block):
     np.testing.assert_allclose(np.asarray(cg), np.asarray(cw), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize(
+    "shape", [(3, 10, 7), (1, 64, 64), (4, 37, 129), (2, 1, 1)], ids=str
+)
+@pytest.mark.parametrize("block", [16, 32])
+def test_congestion_batched_matches_ref(shape, block):
+    """Stacked rank-3 incidence: one fused pass per batch member."""
+    Bt, P, E = shape
+    B = jnp.asarray((RNG.uniform(size=(Bt, P, E)) < 0.15).astype(np.float32))
+    r = jnp.asarray(RNG.uniform(size=(Bt, P)).astype(np.float32))
+    w = jnp.asarray(RNG.uniform(size=(Bt, E)).astype(np.float32))
+    lg, cg = congestion_pallas(B, r, w, bp=block, be=block, interpret=True)
+    lw, cw = ref.congestion_ref(B, r, w)
+    assert lg.shape == (Bt, E) and cg.shape == (Bt, P)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lw), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cg), np.asarray(cw), rtol=1e-5, atol=1e-5)
+
+
+def test_congestion_batched_members_match_single():
+    """Each rank-3 member equals its own rank-2 solve (both backends)."""
+    Bt, P, E = 3, 23, 31
+    B = (RNG.uniform(size=(Bt, P, E)) < 0.2).astype(np.float32)
+    r = RNG.uniform(size=(Bt, P)).astype(np.float32)
+    w = RNG.uniform(size=(Bt, E)).astype(np.float32)
+    lb, cb = ref.congestion_ref(jnp.asarray(B), jnp.asarray(r), jnp.asarray(w))
+    for b in range(Bt):
+        l1, c1 = ref.congestion_ref(
+            jnp.asarray(B[b]), jnp.asarray(r[b]), jnp.asarray(w[b])
+        )
+        np.testing.assert_allclose(np.asarray(lb[b]), np.asarray(l1), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(cb[b]), np.asarray(c1), rtol=1e-6)
+
+
+def test_preferred_congestion_backend_batch_aware():
+    # CPU: batched asks answer 'gather' (PathSystemBatch fan-in tables);
+    # single-instance answers are unchanged
+    single = ops.preferred_congestion_backend(1000, 1000)
+    assert single in ("dense", "scatter")
+    assert ops.preferred_congestion_backend(1000, 1000, n_batch=1) == single
+    assert ops.preferred_congestion_backend(1000, 1000, n_batch=16) == "gather"
+
+
 def test_apsp_minplus_matches_blas_bfs():
     from repro.core import apsp_hops, jellyfish
 

@@ -22,6 +22,8 @@ MODULES = [
     ("fig6", "benchmarks.fig6_legup"),
     ("fig7", "benchmarks.fig7_resilience"),
     ("fig8", "benchmarks.fig8_mptcp"),
+    ("fig9ecmp", "benchmarks.fig9_ecmp"),
+    ("table1", "benchmarks.table1_diversity"),
     ("fig12", "benchmarks.fig12_locality"),
     ("cabling", "benchmarks.fig_cabling"),
     ("fabric", "benchmarks.fabric_scale"),

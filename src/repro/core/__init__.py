@@ -44,6 +44,7 @@ from .placement import CablePlan, localized_jellyfish, plan_cables
 from .routing import (
     PathSystem,
     build_path_system,
+    ecmp_path_system,
     k_shortest_paths,
     set_apsp_backend,
     update_path_system,
@@ -63,6 +64,7 @@ from .traffic import (
     permutation_commodities,
     random_permutation_traffic,
     random_server_permutation,
+    union_commodities,
 )
 
 __all__ = [
@@ -81,9 +83,9 @@ __all__ = [
     "max_feasible", "speculative_max_feasible",
     "Commodities", "random_permutation_traffic", "all_to_all_traffic",
     "random_server_permutation", "extend_server_permutation",
-    "permutation_commodities",
-    "PathSystem", "build_path_system", "k_shortest_paths", "update_path_system",
-    "set_apsp_backend",
+    "permutation_commodities", "union_commodities",
+    "PathSystem", "build_path_system", "ecmp_path_system", "k_shortest_paths",
+    "update_path_system", "set_apsp_backend",
     "FlowResult", "PathSystemBatch", "mw_concurrent_flow",
     "mw_concurrent_flow_batch", "lp_concurrent_flow",
     "lp_edge_concurrent_flow", "throughput",

@@ -103,6 +103,7 @@ __all__ = [
     "PathSystemBatch",
     "mw_concurrent_flow",
     "mw_concurrent_flow_batch",
+    "make_loads_fn_batch",
     "lp_concurrent_flow",
     "lp_edge_concurrent_flow",
     "throughput",
@@ -422,6 +423,95 @@ def make_congestion_fn_batch(
         return ops.congestion(b3, rates, prices, backend=kernel_backend)
 
     return fused
+
+
+def make_loads_fn_batch(
+    path_edges: jnp.ndarray,
+    n_slots: int,
+    n_batch: int,
+    backend: str,
+    slot_gather: jnp.ndarray | None = None,
+):
+    """Loads-only ``B^T r`` batched closure — the congestion backends' load
+    half, for inner loops that never consume path costs.
+
+    The flow-level simulator's waterfilling (``repro.sim.engine``) needs
+    per-slot loads and flow counts but no ``B w`` product; routing it
+    through ``make_congestion_fn_batch`` would compute (and discard) the
+    costs gather every call — about half the iteration cost on the CPU
+    gather path.  Accumulation order per backend is identical to the fused
+    closure's loads half (``gather`` reproduces the scatter-add
+    association bit-exactly, see ``_ordered_fan_in_sum``); ``dense`` /
+    ``pallas`` go through ``ops.congestion`` unchanged — the fused kernel
+    reads each B tile once either way, so the costs half is free there.
+    """
+    shared = path_edges.ndim == 2
+    if backend == "gather":
+        if slot_gather is None:
+            raise ValueError(
+                "gather backend needs the PathSystemBatch fan-in tables"
+            )
+        L = path_edges.shape[-1]
+
+        def loads_fn(rates):
+            fr = jnp.concatenate(
+                [
+                    jnp.repeat(rates, L, axis=1),
+                    jnp.zeros((rates.shape[0], 1), jnp.float32),
+                ],
+                axis=1,
+            )
+            return _ordered_fan_in_sum(fr, slot_gather)
+
+        return loads_fn
+    if backend == "scatter":
+        if shared:
+            P, L = path_edges.shape
+            flat = path_edges.reshape(-1)
+
+            def loads_fn(rates):
+                r = jnp.repeat(rates, L, axis=1)
+                return (
+                    jnp.zeros((n_batch, n_slots + 1), jnp.float32)
+                    .at[:, flat]
+                    .add(r)[:, :n_slots]
+                )
+
+            return loads_fn
+        Bt, P, L = path_edges.shape
+        s1 = n_slots + 1
+        flat_idx = (
+            jnp.arange(Bt, dtype=jnp.int32)[:, None, None] * s1 + path_edges
+        ).reshape(-1)
+
+        def loads_fn(rates):
+            r = jnp.repeat(rates.reshape(-1), L)
+            return (
+                jnp.zeros((Bt * s1,), jnp.float32)
+                .at[flat_idx]
+                .add(r)
+                .reshape(Bt, s1)[:, :n_slots]
+            )
+
+        return loads_fn
+    if backend not in ("dense", "pallas"):
+        raise ValueError(f"unknown congestion backend: {backend!r}")
+    kernel_backend = "pallas" if backend == "pallas" else "auto"
+    if shared:
+        # one (P, S) incidence, batched rates: a plain matmul, exactly the
+        # loads half of the fused shared path
+        b = dense_incidence(path_edges, n_slots)
+
+        def loads_fn(rates):
+            return rates @ b
+
+        return loads_fn
+    b3 = jax.vmap(lambda pe: dense_incidence(pe, n_slots))(path_edges)
+
+    def loads_fn(rates):
+        return ops.congestion_loads(b3, rates, backend=kernel_backend)
+
+    return loads_fn
 
 
 def _resolve_backend(

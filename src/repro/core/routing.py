@@ -95,6 +95,7 @@ __all__ = [
     "PathSystem",
     "k_shortest_paths",
     "build_path_system",
+    "ecmp_path_system",
     "update_path_system",
     "clear_routing_cache",
     "set_apsp_backend",
@@ -947,6 +948,43 @@ def build_path_system(
         dst=np.asarray(comm.dst, dtype=np.int64).copy(),
         k=k,
         max_slack=max_slack,
+    )
+
+
+def ecmp_path_system(
+    top: Topology,
+    comm: Commodities,
+    n_ways: int = 64,
+    dist: np.ndarray | None = None,
+    keep_node_paths: bool = False,
+    cache: bool = True,
+) -> PathSystem:
+    """Equal-cost shortest-path (ECMP) routing tables (paper §3, Table 1).
+
+    ECMP forwarding can use exactly the *shortest* paths: every prefix of a
+    shortest path extends along any next hop that stays on a shortest path,
+    so the set of distinct s->t routes realizable by per-hop equal-cost
+    splitting is the set of shortest simple paths, capped in practice by the
+    hardware's way count (64-way in the paper's Table 1, 16-way commodity
+    gear).  That is ``build_path_system`` with ``max_slack=0`` and
+    ``k = n_ways``: the batched enumerator admits only prefixes that can
+    still complete at the base distance, and its canonical (lexicographic)
+    tie order makes the returned ECMP sets a pure function of (graph, pair,
+    n_ways) — bit-identical across APSP backends and enumeration shards,
+    which is what lets ``repro.sim`` hash flows onto them deterministically.
+
+    The paper's §3 observation (Table 1, Fig 9) falls straight out of the
+    result: on a random graph most pairs have very few equal-cost paths, so
+    ECMP leaves many links unused (``repro.sim.telemetry.path_diversity``
+    counts them), while a k-ary fat-tree gives every inter-pod edge-switch
+    pair exactly ``(k/2)^2`` equal-cost paths.  Per-commodity distinct-path
+    counts are ``np.bincount(ps.path_owner, minlength=ps.n_commodities)``.
+    """
+    if n_ways < 1:
+        raise ValueError(f"n_ways must be >= 1, got {n_ways}")
+    return build_path_system(
+        top, comm, k=n_ways, max_slack=0, dist=dist,
+        keep_node_paths=keep_node_paths, cache=cache,
     )
 
 

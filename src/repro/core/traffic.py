@@ -22,6 +22,7 @@ __all__ = [
     "random_server_permutation",
     "extend_server_permutation",
     "permutation_commodities",
+    "union_commodities",
 ]
 
 
@@ -110,6 +111,40 @@ def permutation_commodities(top: Topology, perm: np.ndarray) -> Commodities:
         demand=counts.astype(np.float64),
         n_flows=len(perm),
     )
+
+
+def union_commodities(
+    top: Topology, perms: "list[np.ndarray]"
+) -> tuple[Commodities, list[np.ndarray]]:
+    """Union commodity set of several server permutations + per-epoch demands.
+
+    The churn workloads of ``repro.sim`` re-draw permutation traffic every
+    epoch but must route ONCE (a jitted sim scan cannot re-enumerate paths
+    mid-flight): the union of the epochs' switch-pair commodities is routed
+    up front, and each epoch re-weights demand over that union.  Returns
+    ``(union, per_epoch)`` where ``union.demand`` is the per-pair maximum
+    across epochs (the routing-relevant envelope) and ``per_epoch[e]`` is
+    epoch e's demand in union commodity order (zero where unused).
+    """
+    if not perms:
+        raise ValueError("union_commodities needs at least one permutation")
+    comms = [permutation_commodities(top, p) for p in perms]
+    n = top.n_switches
+    keys = np.unique(np.concatenate([c.src * n + c.dst for c in comms]))
+    dem = np.zeros(len(keys))
+    per_epoch = []
+    for c in comms:
+        e = np.zeros(len(keys))
+        e[np.searchsorted(keys, c.src * n + c.dst)] = c.demand
+        np.maximum(dem, e, out=dem)
+        per_epoch.append(e)
+    union = Commodities(
+        src=(keys // n).astype(np.int64),
+        dst=(keys % n).astype(np.int64),
+        demand=dem,
+        n_flows=comms[0].n_flows,
+    )
+    return union, per_epoch
 
 
 def random_permutation_traffic(

@@ -49,6 +49,7 @@ __all__ = [
     "minplus",
     "matmul",
     "congestion",
+    "congestion_loads",
     "apsp_minplus",
     "apsp_minplus_blocked",
     "power_iteration_lambda2",
@@ -125,6 +126,28 @@ def congestion(incidence, rates, prices, backend: str = "auto", **blocks):
     if backend == "ref" or (backend == "auto" and not _on_tpu()):
         return ref.congestion_ref(incidence, rates, prices)
     return congestion_pallas(incidence, rates, prices, **blocks)
+
+
+def congestion_loads(incidence, rates, backend: str = "auto", **blocks):
+    """Loads-only ``B^T r`` over a dense (or stacked rank-3) incidence.
+
+    The flow-level simulator's waterfilling (``repro.sim.engine``) runs the
+    congestion primitive's *load* half twice per round but never consumes
+    path costs.  On CPU the reference is a plain (batched) matmul — half
+    the work of ``congestion_ref``.  On TPU the fused kernel reads each B
+    tile from HBM once whether it feeds one MXU pass or two, so the fused
+    call costs the same HBM traffic and we simply drop the costs output.
+    """
+    if backend == "ref" or (backend == "auto" and not _on_tpu()):
+        b = jnp.asarray(incidence, dtype=jnp.float32)
+        r = jnp.asarray(rates, dtype=jnp.float32)
+        if b.ndim == 3:
+            return jnp.einsum("bp,bpe->be", r, b)
+        return r @ b
+    zeros = jnp.zeros(
+        incidence.shape[:-2] + (incidence.shape[-1],), jnp.float32
+    )
+    return congestion_pallas(incidence, rates, zeros, **blocks)[0]
 
 
 def _squarings_to_cover(cover: int) -> int:

@@ -1,0 +1,91 @@
+"""repro.sim: batched flow-level dynamic-traffic engine (paper §3, Table 1, Fig 9).
+
+The paper's central routing observation is *operational*: ECMP gives a random
+graph too little path diversity (Table 1), and restoring fat-tree-level
+throughput needs k-shortest-path routing with MPTCP on top (Fig 9).  The
+steady-state LP/MW solvers in ``repro.core`` can rank routings, but cannot
+exercise them under *time-varying* traffic — flow arrivals and departures,
+diurnal load, elephant/mice mixes, tenant churn.  This package adds that
+missing time domain:
+
+* ``ecmp``      — equal-cost path sets (``routing.ecmp_path_system``) and the
+  deterministic integer-mixing flow hash ECMP uses to pin flows to paths;
+* ``engine``    — a JAX ``lax.scan`` fluid flow-level simulator, batched over
+  topology seeds/instances through ``core.flow.PathSystemBatch`` with
+  per-instance masks; the max-min waterfilling inner loop reuses the MW
+  solver's congestion backends (``gather`` fan-in tables on CPU, the fused
+  rank-3 ``congestion_pallas`` kernel on TPU);
+* ``workloads`` — scenario generators (steady Poisson, diurnal wave,
+  elephant/mice, permutation churn, tenant arrival/departure riding
+  ``core.expansion`` + ``routing.update_path_system``);
+* ``telemetry`` — FCT percentiles, per-link utilization, throughput
+  timeseries reductions, and the Table-1 / Fig-9 path-diversity counters.
+
+Import validates the ``REPRO_SIM_MAX_STEPS`` / ``REPRO_SIM_MAX_BATCH``
+environment caps (mirroring ``REPRO_APSP_BACKEND``'s fail-loudly-at-startup
+discipline).
+"""
+
+from .ecmp import (
+    ecmp_group_sizes,
+    ecmp_path_system,
+    fattree_ecmp_check,
+    flow_hash,
+    hash_select_rows,
+)
+from .engine import (
+    POLICIES,
+    SIM_MAX_BATCH,
+    SIM_MAX_STEPS,
+    SimConfig,
+    SimResult,
+    simulate,
+    waterfill_rates,
+)
+from .telemetry import (
+    fct_percentiles,
+    link_utilization,
+    path_diversity,
+    per_commodity_goodput,
+    per_commodity_throughput,
+    ranked_normalized_throughput,
+    steady_state_throughput,
+)
+from .workloads import (
+    Workload,
+    diurnal_wave,
+    elephant_mice,
+    permutation_churn,
+    run_tenant_churn,
+    steady_poisson,
+    tenant_churn_segments,
+)
+
+__all__ = [
+    "ecmp_path_system",
+    "ecmp_group_sizes",
+    "fattree_ecmp_check",
+    "flow_hash",
+    "hash_select_rows",
+    "POLICIES",
+    "SIM_MAX_STEPS",
+    "SIM_MAX_BATCH",
+    "SimConfig",
+    "SimResult",
+    "simulate",
+    "waterfill_rates",
+    "Workload",
+    "steady_poisson",
+    "diurnal_wave",
+    "elephant_mice",
+    "permutation_churn",
+    "tenant_churn_segments",
+    "run_tenant_churn",
+    "fct_percentiles",
+    "link_utilization",
+    "path_diversity",
+    "per_commodity_goodput",
+    "per_commodity_throughput",
+    "ranked_normalized_throughput",
+    "steady_state_throughput",
+]

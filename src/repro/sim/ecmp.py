@@ -1,0 +1,155 @@
+"""ECMP path sets and the deterministic flow hash (paper §3, Table 1).
+
+The paper's Table 1 counts *distinct paths* available to ECMP on a
+686-server Jellyfish versus 8-shortest-path routing, and Fig 9 shows the
+throughput consequence.  Two pieces reproduce that here:
+
+* ``ecmp_path_system`` (re-exported from ``core.routing``) — the set of
+  equal-cost shortest paths per commodity, capped at the hardware way count.
+  It rides the batched enumerator with ``max_slack=0`` on the blocked-APSP
+  int16 distances, so ECMP sets are bit-identical across APSP backends and
+  enumeration shards (the exact-parity discipline of
+  ``tests/test_apsp_blocked.py``).
+
+* ``flow_hash`` — the per-flow path-selection hash.  Real ECMP hardware
+  hashes the five-tuple; we hash (src switch, dst switch, flow id, salt)
+  through a murmur3-style 32-bit integer finalizer.  Crucially this is pure
+  integer mixing — **no Python ``hash()``**, whose ``PYTHONHASHSEED``
+  dependence would decorrelate runs across processes — so a flow's path is
+  a pure function of its identifiers, reproducible across processes, seeds,
+  and numpy/JAX execution (the engine calls it inside a jitted scan, the
+  tests with golden numpy inputs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.routing import ecmp_path_system
+
+__all__ = [
+    "ecmp_path_system",
+    "flow_hash",
+    "ecmp_group_sizes",
+    "fattree_ecmp_check",
+    "hash_select_rows",
+]
+
+
+# murmur3 fmix32 multipliers and the 32-bit golden-ratio increment: the
+# standard avalanche constants — every output bit depends on every input bit.
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_PHI = 0x9E3779B9
+
+
+def _namespace(*xs):
+    """jnp when any operand is a JAX array (traced or concrete), else numpy."""
+    for x in xs:
+        if isinstance(x, jax.Array):
+            return jnp
+    return np
+
+
+def _fmix32(h, xp):
+    """murmur3's 32-bit finalizer (xor-shift / multiply avalanche)."""
+    h = h ^ (h >> 16)
+    h = h * xp.uint32(_M1)
+    h = h ^ (h >> 13)
+    h = h * xp.uint32(_M2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def flow_hash(src, dst, flow_id, salt=0):
+    """Deterministic 32-bit mixing hash of a flow's identifiers.
+
+    ``h = fmix(fmix(fmix(id ^ salt*phi) ^ src*M1) ^ dst*M2)`` over wrapping
+    uint32 arithmetic; operands broadcast like numpy arrays.  The ECMP
+    policy in ``sim.engine`` selects path ``h % n_equal_cost_paths``.
+    Stable by construction: no ``PYTHONHASHSEED``, no float rounding, and
+    identical results under numpy and (jitted) jax.numpy — asserted against
+    golden values in ``tests/test_sim.py``.
+    """
+    xp = _namespace(src, dst, flow_id, salt)
+    with np.errstate(over="ignore"):
+        s = xp.asarray(src).astype(xp.uint32)
+        d = xp.asarray(dst).astype(xp.uint32)
+        f = xp.asarray(flow_id).astype(xp.uint32)
+        q = xp.asarray(salt).astype(xp.uint32)
+        h = _fmix32(f ^ (q * xp.uint32(_PHI)), xp)
+        h = _fmix32(h ^ (s * xp.uint32(_M1)), xp)
+        h = _fmix32(h ^ (d * xp.uint32(_M2)), xp)
+    return h
+
+
+def hash_select_rows(ps, salt: int = 0) -> np.ndarray:
+    """One hash-selected path row per server flow (Table 1's ECMP side).
+
+    Expands each commodity into its ``demand``'s worth of unit server flows
+    (flow ids are globally sequential) and picks each flow's path as
+    ``flow_hash(src, dst, id, salt) % group_size`` — what a static ECMP
+    fabric would do.  The returned (n_flows,) row indices feed the
+    link-coverage counts of ``benchmarks/table1_diversity.py``: under ECMP
+    a large share of a random graph's links carries few or no flows, while
+    the full 8-shortest path system covers essentially all of them.
+
+    Requires pedigree (``ps.src``/``ps.dst``) and relies on
+    ``build_path_system`` grouping path rows contiguously by commodity.
+    """
+    if ps.src is None or ps.dst is None or ps.unrouted is None:
+        raise ValueError("hash_select_rows needs a path system with pedigree")
+    kept = ~np.asarray(ps.unrouted)
+    src = np.asarray(ps.src)[kept].astype(np.uint32)
+    dst = np.asarray(ps.dst)[kept].astype(np.uint32)
+    owner = np.asarray(ps.path_owner)
+    d = np.maximum(np.round(np.asarray(ps.demands)).astype(np.int64), 1)
+    cnt = np.bincount(owner, minlength=ps.n_commodities)
+    first = np.searchsorted(owner, np.arange(ps.n_commodities))
+    ci = np.repeat(np.arange(ps.n_commodities), d)
+    fid = np.arange(len(ci), dtype=np.uint32)
+    h = flow_hash(src[ci], dst[ci], fid, salt)
+    pick = (h % np.maximum(cnt[ci], 1).astype(np.uint32)).astype(np.int64)
+    return first[ci] + pick
+
+
+def ecmp_group_sizes(ps) -> np.ndarray:
+    """(K,) distinct equal-cost paths per commodity of an ECMP path system.
+
+    Table 1's per-pair counts: on a random graph most entries are tiny
+    (often 1), on a k-ary fat-tree every inter-pod edge-switch pair shows
+    exactly ``(k/2)^2``.
+    """
+    return np.bincount(ps.path_owner, minlength=ps.n_commodities)
+
+
+def fattree_ecmp_check(ps, ft_k: int) -> dict:
+    """Enumerated fat-tree ECMP groups vs the analytic equal-cost counts.
+
+    A k-ary fat-tree offers exactly ``(k/2)^2`` equal-cost paths per
+    inter-pod edge-switch pair and ``k/2`` per same-pod pair; edge switches
+    are numbered in pod blocks, so ``src // k != dst // k`` separates the
+    two classes.  Returns the expected counts, the observed distinct group
+    sizes per class, and per-class exactness flags — the control both
+    ``benchmarks/fig8_mptcp.py`` and ``benchmarks/table1_diversity.py``
+    assert before trusting an ``ecmp_path_system`` on a fat-tree.
+    """
+    if ps.src is None or ps.dst is None or ps.unrouted is None:
+        raise ValueError("fattree_ecmp_check needs a path system with pedigree")
+    groups = ecmp_group_sizes(ps)
+    kept = ~np.asarray(ps.unrouted)
+    src = np.asarray(ps.src)[kept]
+    dst = np.asarray(ps.dst)[kept]
+    inter = (src // ft_k) != (dst // ft_k)
+    exp_inter, exp_same = (ft_k // 2) ** 2, ft_k // 2
+    return {
+        "expected_inter_pod": exp_inter,
+        "expected_same_pod": exp_same,
+        "inter_pod_groups": np.unique(groups[inter]),
+        "same_pod_groups": np.unique(groups[~inter]),
+        "inter_pod_groups_exact": bool(np.all(groups[inter] == exp_inter)),
+        "same_pod_groups_exact": bool(np.all(groups[~inter] == exp_same)),
+    }

@@ -113,6 +113,31 @@ def test_congestion_batched_members_match_single():
         np.testing.assert_allclose(np.asarray(cb[b]), np.asarray(c1), rtol=1e-6)
 
 
+def test_congestion_loads_matches_fused():
+    """Loads-only entry point (the sim waterfilling's primitive) agrees
+    with the fused reference's loads half, rank-2 and rank-3, and with the
+    interpret-mode kernel path."""
+    Bt, P, E = 3, 23, 31
+    B3 = jnp.asarray((RNG.uniform(size=(Bt, P, E)) < 0.2).astype(np.float32))
+    r3 = jnp.asarray(RNG.uniform(size=(Bt, P)).astype(np.float32))
+    want3 = ref.congestion_ref(B3, r3, jnp.zeros((Bt, E)))[0]
+    np.testing.assert_allclose(
+        np.asarray(ops.congestion_loads(B3, r3, backend="ref")),
+        np.asarray(want3), rtol=1e-5, atol=1e-6,
+    )
+    B2, r2 = B3[0], r3[0]
+    want2 = ref.congestion_ref(B2, r2, jnp.zeros(E))[0]
+    np.testing.assert_allclose(
+        np.asarray(ops.congestion_loads(B2, r2, backend="ref")),
+        np.asarray(want2), rtol=1e-5, atol=1e-6,
+    )
+    got_k = ops.congestion_loads(B2, r2, backend="pallas", bp=16, be=16,
+                                 interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got_k), np.asarray(want2), rtol=1e-5, atol=1e-5
+    )
+
+
 def test_preferred_congestion_backend_batch_aware():
     # CPU: batched asks answer 'gather' (PathSystemBatch fan-in tables);
     # single-instance answers are unchanged

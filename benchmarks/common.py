@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import json
-import os
 import pathlib
 import time
 
@@ -19,13 +18,14 @@ from repro.core import (
     random_permutation_traffic,
     speculative_max_feasible,
 )
+from repro import env
 from repro.core.flow import LP_PATH_LIMIT
 
-ART = pathlib.Path(os.environ.get("REPRO_BENCH_OUT", "artifacts/bench"))
-FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))  # bigger sizes
+ART = pathlib.Path(env.read("REPRO_BENCH_OUT"))
+FULL = env.read("REPRO_BENCH_FULL")  # bigger sizes
 # CI bench-smoke lane: tiny configs (2 sweep sizes, 1 run) so delta-vs-rebuild
 # speedup and alpha parity are tracked per PR in minutes, not hours
-SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+SMOKE = env.read("REPRO_BENCH_SMOKE")
 
 
 def save(name: str, payload: dict) -> None:
@@ -41,8 +41,7 @@ def save(name: str, payload: dict) -> None:
 #: ``throughput()`` callers would tolerate.  Setting REPRO_LP_PATH_LIMIT
 #: (validated at flow import) steers BOTH cutoffs to the same value.
 MW_MIN_PATHS = (
-    LP_PATH_LIMIT if os.environ.get("REPRO_LP_PATH_LIMIT", "").strip()
-    else 30000
+    LP_PATH_LIMIT if env.is_set("REPRO_LP_PATH_LIMIT") else 30000
 )
 
 

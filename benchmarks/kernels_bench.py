@@ -8,7 +8,6 @@ tiny interpret-mode validation timing."""
 
 from __future__ import annotations
 
-import os
 import resource
 import time
 import tracemalloc
@@ -18,6 +17,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import env
 from repro.core import (
     add_switch,
     apsp_hops,
@@ -420,7 +420,7 @@ def run() -> list[str]:
             "n_paths": int(bps.n_paths), "alpha": float(bmw.alpha),
         }
 
-    if bool(int(os.environ.get("REPRO_BENCH_XL", "0"))):
+    if env.read("REPRO_BENCH_XL"):
         # the blocked-APSP scale rung: RRG(8192, 48, 36) = 98k servers.
         # Distance state is N^2 int16 (128 MiB) + one <= 256 MiB f32 shard
         # tile; budget documented in ROADMAP.md (< 4 GiB resident for

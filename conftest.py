@@ -2,6 +2,7 @@
 # src/ holds the package, the repo root holds benchmarks/ (imported by some
 # tests).  Deliberately does NOT touch XLA flags — smoke tests must see the
 # real single-device CPU; multi-device tests spawn subprocesses.
+import os
 import pathlib
 import sys
 
@@ -9,6 +10,12 @@ ROOT = pathlib.Path(__file__).resolve().parent
 for p in (str(ROOT / "src"), str(ROOT)):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+# Runtime contract checks (repro.analysis.contracts) default ON under the
+# test suite so every builder/delta/sim path is validated on every run.
+# setdefault: REPRO_CHECK=0 still lets a developer time the unchecked path.
+# Must happen before any repro import — the flag is read at module import.
+os.environ.setdefault("REPRO_CHECK", "1")
 
 
 def pytest_configure(config):

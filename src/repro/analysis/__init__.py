@@ -1,0 +1,51 @@
+"""repro.analysis: the determinism toolbox — linter, contracts, tracer.
+
+Three layers guard the invariants the solvers' bit-exactness claims rest on
+(INVARIANTS.md is the catalog):
+
+- :mod:`repro.analysis.linter` — pure-stdlib AST linter (rules JF001-JF006)
+  run as ``python -m repro.analysis src benchmarks``; CI's lint lane.
+- :mod:`repro.analysis.contracts` — runtime validators for PathSystem /
+  PathSystemBatch / SimResult structural invariants, wired into the build
+  boundaries behind ``REPRO_CHECK=1`` (tier-1 tests default it on).
+- :mod:`repro.analysis.retrace` — compile-count tracer asserting
+  one-compile-per-shape-bucket (exposed lazily: it imports jax, the
+  lint CLI must not).
+"""
+
+from __future__ import annotations
+
+from .contracts import (
+    ContractViolation,
+    check_hop_matrix,
+    check_path_system,
+    check_path_system_batch,
+    check_sim_state,
+    checks_enabled,
+    set_check_enabled,
+)
+from .linter import RULES, Violation, lint_file, lint_paths, lint_source
+
+__all__ = [
+    "ContractViolation",
+    "RULES",
+    "Violation",
+    "check_hop_matrix",
+    "check_path_system",
+    "check_path_system_batch",
+    "check_sim_state",
+    "checks_enabled",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "retrace",
+    "set_check_enabled",
+]
+
+
+def __getattr__(name: str):
+    if name == "retrace":  # lazy: retrace imports jax; the lint CLI must not
+        import importlib
+
+        return importlib.import_module("repro.analysis.retrace")
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

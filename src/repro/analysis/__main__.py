@@ -1,0 +1,32 @@
+"""CLI: ``python -m repro.analysis [paths...]`` — run the invariant linter.
+
+Exit status 0 when clean, 1 when any rule fires.  Pure stdlib (no jax), so
+CI's lint lane runs it without warming an accelerator runtime.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .linter import RULES, lint_paths
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["src", "benchmarks"]
+    violations = lint_paths(paths)
+    for v in violations:
+        print(v)
+    if violations:
+        counts: dict[str, int] = {}
+        for v in violations:
+            counts[v.rule] = counts.get(v.rule, 0) + 1
+        summary = ", ".join(
+            f"{rule} x{n} ({RULES[rule]})" for rule, n in sorted(counts.items())
+        )
+        print(f"\n{len(violations)} violation(s): {summary}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

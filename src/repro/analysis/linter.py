@@ -1,0 +1,418 @@
+"""AST-based invariant linter: the repo-specific determinism rules.
+
+Each rule guards an invariant some PR established by hand and nothing was
+checking mechanically (see INVARIANTS.md for the catalog):
+
+JF001  No Python ``hash()`` / set-iteration in routing/sim code paths.
+       ``hash()`` of str/bytes is randomized per process (PYTHONHASHSEED)
+       and set iteration order is an implementation detail — the
+       ``sim.ecmp.flow_hash`` lesson.  Membership tests and
+       order-insensitive folds (len/min/max/sum/any/all) are fine;
+       iterating, ``list()``-ing or ``.pop()``-ing a set is not unless it
+       goes through ``sorted(...)``.
+JF002  ``np.argsort`` in the enumerator/delta/canonical-tie modules must
+       pass ``kind="stable"`` — numpy's default introsort is unstable, so
+       equal keys come back in an arbitrary, version-dependent order (the
+       ``routing.py`` slot-lookup slip this rule first caught).
+       ``np.unique`` output is already sorted+deduplicated and
+       ``jnp.argsort`` is stable by default, so neither is flagged.
+JF003  ``os.environ`` reads of ``REPRO_*`` must go through the central
+       validated registry ``repro.env`` — hand-rolled parsing is how
+       ``REPRO_ROUTE_TILE_BYTES`` shipped with no validation at all.
+JF004  A Pallas kernel entry point (a function that both pads operands and
+       launches ``pl.pallas_call``) must validate dtypes BEFORE padding —
+       the PR 3 ``check_minplus_dtype`` rule, generalized (inf/zero-padding
+       a wrong-dtype operand fails far from the caller, or worse, silently
+       truncates).
+JF005  Raw ``jnp.sum`` / ``jnp.einsum`` reductions inside the MW/waterfill
+       solver files must use the positional ``_fold_sum`` halving tree —
+       XLA's reduce association is size-dependent, so a raw sum over a
+       padded path/slot axis makes results depend on the padding envelope
+       (PR 4's bit-exactness fix).
+JF006  ``jax.jit`` must not be created inside a function body in the
+       solver modules: a per-call wrapper gets a fresh compilation cache
+       every call — the ``_mw_window`` retrace bug class.  Module-level
+       ``@jax.jit`` / ``functools.partial(jax.jit, static_argnames=...)``
+       is the sanctioned pattern.
+
+A finding can be suppressed per line with ``# repro-lint: disable=JF00X``.
+The linter is pure stdlib (``ast``) — ``python -m repro.analysis src
+benchmarks`` needs no jax and is CI's lint lane.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+__all__ = ["RULES", "Violation", "lint_file", "lint_paths", "lint_source"]
+
+RULES = {
+    "JF001": "no hash()/set-iteration in routing/sim code paths",
+    "JF002": 'np.argsort must pass kind="stable" in ordering modules',
+    "JF003": "REPRO_* env reads must go through repro.env",
+    "JF004": "Pallas entry points must validate dtypes before padding",
+    "JF005": "solver reductions over padded axes must use _fold_sum",
+    "JF006": "no jax.jit created inside a function body in solver modules",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+# --------------------------------------------------------------------------- #
+# rule scoping (path suffix matching on normalized separators)
+# --------------------------------------------------------------------------- #
+
+_ROUTING_SIM_FILES = (
+    "repro/core/routing.py",
+    "repro/core/flow.py",
+    "repro/core/mptcp.py",
+)
+_FOLD_SUM_FILES = (
+    "repro/core/flow.py",
+    "repro/core/mptcp.py",
+    "repro/sim/engine.py",
+)
+_SOLVER_DIRS = ("repro/core/", "repro/sim/", "repro/kernels/")
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _in_routing_sim(path: str) -> bool:
+    p = _norm(path)
+    return p.endswith(_ROUTING_SIM_FILES) or "repro/sim/" in p
+
+
+def _in_fold_sum_scope(path: str) -> bool:
+    return _norm(path).endswith(_FOLD_SUM_FILES)
+
+
+def _in_kernels(path: str) -> bool:
+    return "repro/kernels/" in _norm(path)
+
+
+def _in_solver(path: str) -> bool:
+    p = _norm(path)
+    return any(d in p for d in _SOLVER_DIRS)
+
+
+def _is_env_registry(path: str) -> bool:
+    return _norm(path).endswith("repro/env.py")
+
+
+# --------------------------------------------------------------------------- #
+# AST helpers
+# --------------------------------------------------------------------------- #
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jnp.sum', 'hash', ...)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _is_set_expr(node: ast.AST, set_names: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and _dotted(node.func) in ("set", "frozenset"):
+        return True
+    if isinstance(node, ast.Name) and node.id in set_names:
+        return True
+    return False
+
+
+def _collect_set_names(tree: ast.AST) -> set[str]:
+    """Names bound to set-producing expressions anywhere in the module.
+
+    Deliberately flow-insensitive: reusing one name for a set in one branch
+    and a list in another is exactly the ambiguity the rule wants flagged
+    when that name is later iterated.  A name is only *removed* when every
+    assignment to it is non-set (handled by never adding it)."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        value = None
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            value, targets = node.value, node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            value, targets = node.value, [node.target]
+        if value is None or not _is_set_expr(value, names):
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                names.add(t.id)
+    return names
+
+
+_ORDER_SENSITIVE_CONSUMERS = ("list", "tuple", "enumerate", "iter")
+_ORDER_SENSITIVE_ATTRS = ("array", "asarray", "fromiter", "join")
+
+
+# --------------------------------------------------------------------------- #
+# per-rule checks
+# --------------------------------------------------------------------------- #
+
+
+def _check_jf001(tree: ast.AST, path: str, out: list[Violation]) -> None:
+    set_names = _collect_set_names(tree)
+
+    def iter_targets(node: ast.AST):
+        if isinstance(node, ast.For):
+            yield node.iter
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter
+
+    for node in ast.walk(tree):
+        for it in iter_targets(node):
+            if _is_set_expr(it, set_names):
+                out.append(Violation(
+                    "JF001", path, it.lineno, it.col_offset,
+                    "iteration over a Python set: the order is hash/"
+                    "insertion dependent; materialize with sorted(...)",
+                ))
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name == "hash":
+            out.append(Violation(
+                "JF001", path, node.lineno, node.col_offset,
+                "Python hash() is process-seeded (PYTHONHASHSEED); use a "
+                "deterministic mix like sim.ecmp.flow_hash",
+            ))
+        elif (name in _ORDER_SENSITIVE_CONSUMERS
+              or name.rsplit(".", 1)[-1] in _ORDER_SENSITIVE_ATTRS):
+            if node.args and _is_set_expr(node.args[0], set_names):
+                out.append(Violation(
+                    "JF001", path, node.lineno, node.col_offset,
+                    f"{name}() over a Python set materializes hash/"
+                    "insertion order; wrap the set in sorted(...) first",
+                ))
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "pop" and not node.args
+              and _is_set_expr(node.func.value, set_names)):
+            out.append(Violation(
+                "JF001", path, node.lineno, node.col_offset,
+                "set.pop() removes an arbitrary element; sets in routing/"
+                "sim code must be consumed through sorted(...)",
+            ))
+
+
+def _check_jf002(tree: ast.AST, path: str, out: list[Violation]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func) not in ("np.argsort", "numpy.argsort"):
+            continue
+        kind = next((kw.value for kw in node.keywords if kw.arg == "kind"),
+                    None)
+        ok = (isinstance(kind, ast.Constant)
+              and kind.value in ("stable", "mergesort"))
+        if not ok:
+            out.append(Violation(
+                "JF002", path, node.lineno, node.col_offset,
+                'np.argsort without kind="stable": equal keys come back in '
+                "an arbitrary introsort order, breaking canonical tie "
+                "ordering (delta == rebuild bit-exactness)",
+            ))
+
+
+def _check_jf003(tree: ast.AST, path: str, out: list[Violation]) -> None:
+    def is_os_environ(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Attribute) and node.attr == "environ"
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "os")
+
+    def repro_key(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Constant) and isinstance(node.value, str)
+                and node.value.startswith("REPRO_"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) and is_os_environ(node.value) \
+                and repro_key(node.slice) \
+                and isinstance(node.ctx, ast.Load):
+            out.append(Violation(
+                "JF003", path, node.lineno, node.col_offset,
+                "read REPRO_* variables through repro.env "
+                "(env.read(...)), not os.environ[...]: the registry "
+                "validates at import with an error naming the variable",
+            ))
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        env_get = (isinstance(func, ast.Attribute) and func.attr == "get"
+                   and is_os_environ(func.value))
+        getenv = _dotted(func) == "os.getenv"
+        if (env_get or getenv) and node.args and repro_key(node.args[0]):
+            out.append(Violation(
+                "JF003", path, node.lineno, node.col_offset,
+                "read REPRO_* variables through repro.env "
+                "(env.read(...)), not os.environ.get/os.getenv: the "
+                "registry validates at import with an error naming the "
+                "variable",
+            ))
+
+
+def _check_jf004(tree: ast.AST, path: str, out: list[Violation]) -> None:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        pads: list[ast.Call] = []
+        has_pallas = False
+        first_check_line = None
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _dotted(node.func)
+            leaf = name.rsplit(".", 1)[-1].lower()
+            if name in ("jnp.pad", "jax.numpy.pad"):
+                pads.append(node)
+            elif leaf == "pallas_call":
+                has_pallas = True
+            elif "check" in leaf and "dtype" in leaf:
+                if first_check_line is None or node.lineno < first_check_line:
+                    first_check_line = node.lineno
+        if not (pads and has_pallas):
+            continue
+        first_pad = min(pads, key=lambda n: n.lineno)
+        if first_check_line is None or first_check_line > first_pad.lineno:
+            out.append(Violation(
+                "JF004", path, first_pad.lineno, first_pad.col_offset,
+                f"kernel entry point {fn.name}() pads operands before any "
+                "check_*dtype* validation; validate dtypes first "
+                "(the check_minplus_dtype rule, PR 3)",
+            ))
+
+
+def _check_jf005(tree: ast.AST, path: str, out: list[Violation]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name in ("jnp.sum", "jax.numpy.sum"):
+            out.append(Violation(
+                "JF005", path, node.lineno, node.col_offset,
+                "raw jnp.sum in a solver file: XLA's reduce association "
+                "depends on the (padded) axis size; use the positional "
+                "_fold_sum halving tree (padding-invariant)",
+            ))
+        elif name in ("jnp.einsum", "jax.numpy.einsum"):
+            out.append(Violation(
+                "JF005", path, node.lineno, node.col_offset,
+                "raw jnp.einsum in a solver file: contraction order/"
+                "association is size-dependent; use _fold_sum-based "
+                "primitives for padded-axis reductions",
+            ))
+
+
+def _check_jf006(tree: ast.AST, path: str, out: list[Violation]) -> None:
+    def is_jit(node: ast.AST) -> bool:
+        if _dotted(node) in ("jax.jit", "jit"):
+            return True
+        # functools.partial(jax.jit, ...)
+        return (isinstance(node, ast.Call)
+                and _dotted(node.func) in ("functools.partial", "partial")
+                and node.args
+                and _dotted(node.args[0]) in ("jax.jit", "jit"))
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            continue
+        # everything below this point is INSIDE a function body
+        for node in ast.walk(fn):
+            if node is fn:
+                continue
+            hit = None
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if is_jit(dec) or (isinstance(dec, ast.Call)
+                                       and is_jit(dec.func)):
+                        hit = dec
+                        break
+            elif isinstance(node, ast.Call) and is_jit(node.func):
+                hit = node
+            if hit is not None:
+                out.append(Violation(
+                    "JF006", path, hit.lineno, hit.col_offset,
+                    "jax.jit created inside a function body gets a fresh "
+                    "compile cache per call (the _mw_window retrace bug "
+                    "class); hoist to a module-level jit with "
+                    "static_argnames and pass per-call scalars as traced "
+                    "arguments",
+                ))
+
+
+# --------------------------------------------------------------------------- #
+# driver
+# --------------------------------------------------------------------------- #
+
+
+def lint_source(source: str, path: str) -> list[Violation]:
+    """Lint one file's source text under the rules scoped to ``path``."""
+    tree = ast.parse(source, filename=path)
+    out: list[Violation] = []
+    if _in_routing_sim(path):
+        _check_jf001(tree, path, out)
+        _check_jf002(tree, path, out)
+    if not _is_env_registry(path):
+        _check_jf003(tree, path, out)
+    if _in_kernels(path):
+        _check_jf004(tree, path, out)
+    if _in_fold_sum_scope(path):
+        _check_jf005(tree, path, out)
+    if _in_solver(path):
+        _check_jf006(tree, path, out)
+
+    lines = source.splitlines()
+
+    def suppressed(v: Violation) -> bool:
+        if not (1 <= v.line <= len(lines)):
+            return False
+        return f"repro-lint: disable={v.rule}" in lines[v.line - 1]
+
+    return sorted(
+        (v for v in out if not suppressed(v)),
+        key=lambda v: (v.line, v.col, v.rule),
+    )
+
+
+def lint_file(path: str) -> list[Violation]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), path)
+
+
+def lint_paths(paths: list[str]) -> list[Violation]:
+    """Lint every ``.py`` file under the given files/directories."""
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    out: list[Violation] = []
+    for f in files:
+        out.extend(lint_file(f))
+    return out

@@ -1,0 +1,146 @@
+"""Compile-count tracer: assert one-compile-per-shape-bucket.
+
+The solvers are bucketed-shape designs — path/slot axes round up to
+geometric buckets precisely so that sweeping many topologies reuses a small
+set of compiled executables.  A silent retrace (a jit tracing again for
+inputs that SHOULD share a bucket) is a pure performance bug: nothing is
+numerically wrong, the sweep is just 10-100x slower.  The ``_mw_window``
+incident that motivated rule JF006 shipped exactly that way — a per-call
+Python scalar was baked into the trace, and every solve recompiled.
+
+Two independent instruments (both cheap enough for tier-1 tests):
+
+``solver_cache_sizes()``
+    Snapshot of every named solver jit's compilation-cache size
+    (``jitted._cache_size()``).  Diff two snapshots around a workload to
+    see exactly which entry point retraced.
+
+``track_compiles()``
+    Context manager counting *backend compiles* process-wide via
+    ``jax.monitoring`` event-duration listeners.  Counts XLA compilations
+    regardless of which jit (or host library) triggered them, so it also
+    catches caches the registry doesn't know about.
+
+This module imports jax, so it is NOT pulled in by the pure-stdlib lint
+CLI; ``repro.analysis`` exposes it lazily.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+__all__ = [
+    "CompileCounter",
+    "named_solver_jits",
+    "solver_cache_sizes",
+    "track_compiles",
+]
+
+#: ``(module, attribute)`` of every module-level solver jit.  Kept as names
+#: (imported on demand) so importing repro.analysis.retrace does not drag in
+#: the whole solver stack, and so a renamed entry point fails loudly here.
+_SOLVER_JITS = (
+    ("repro.core.flow", "_mw_carry_init"),
+    ("repro.core.flow", "_mw_window"),
+    ("repro.core.flow", "_mw_final"),
+    ("repro.core.flow", "_mw_carry_init_batch"),
+    ("repro.core.flow", "_mw_window_batch"),
+    ("repro.core.flow", "_mw_final_batch"),
+    ("repro.core.mptcp", "_pf_solve"),
+    ("repro.sim.engine", "_waterfill_jit"),
+    ("repro.sim.engine", "_sim_scan"),
+    ("repro.kernels.minplus", "minplus_pallas"),
+    ("repro.kernels.congestion", "_congestion_pallas_batch"),
+    ("repro.kernels.congestion", "congestion_pallas"),
+    ("repro.kernels.power", "matmul_pallas"),
+    ("repro.kernels.ref", "minplus_ref"),
+    ("repro.kernels.ref", "matmul_ref"),
+    ("repro.kernels.ref", "congestion_ref"),
+)
+
+
+def named_solver_jits() -> dict:
+    """``{"module.attr": jitted}`` for every registered solver entry point."""
+    import importlib
+
+    out = {}
+    for mod_name, attr in _SOLVER_JITS:
+        mod = importlib.import_module(mod_name)
+        out[f"{mod_name}.{attr}"] = getattr(mod, attr)
+    return out
+
+
+def solver_cache_sizes() -> dict:
+    """Compilation-cache size per solver jit, for diffing around a workload.
+
+    A second run of the *same-bucket* workload must leave every entry
+    unchanged; a growing entry names the retracing function directly.
+    """
+    sizes = {}
+    for name, fn in named_solver_jits().items():
+        try:
+            sizes[name] = fn._cache_size()
+        except AttributeError:  # non-jit stand-in (e.g. monkeypatched)
+            sizes[name] = -1
+    return sizes
+
+
+class CompileCounter:
+    """Counts backend-compile events seen while its context was live."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.events: list[str] = []
+
+    def _record(self, event: str) -> None:
+        self.count += 1
+        self.events.append(event)
+
+
+# jax.monitoring has no unregister API for a single listener, so one
+# process-wide listener fans out to whatever counters are currently live.
+_live_counters: list[CompileCounter] = []
+_lock = threading.Lock()
+_registered = False
+
+
+def _listener(event: str, duration: float, **kwargs) -> None:
+    if "backend_compile" not in event:
+        return
+    with _lock:
+        for counter in _live_counters:
+            counter._record(event)
+
+
+def _ensure_listener() -> None:
+    global _registered
+    with _lock:
+        if not _registered:
+            jax.monitoring.register_event_duration_secs_listener(_listener)
+            _registered = True
+
+
+@contextlib.contextmanager
+def track_compiles():
+    """Count XLA backend compiles inside the block.
+
+        with track_compiles() as c:
+            warmup(batch)          # compiles: c.count > 0
+        with track_compiles() as c:
+            sweep(batches)         # same buckets: assert c.count == 0
+
+    Counts are process-wide (any thread, any jit), which is the point — a
+    retrace hiding behind a helper the registry doesn't list still shows up.
+    """
+    _ensure_listener()
+    counter = CompileCounter()
+    with _lock:
+        _live_counters.append(counter)
+    try:
+        yield counter
+    finally:
+        with _lock:
+            _live_counters.remove(counter)

@@ -86,7 +86,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 import warnings
 from typing import Sequence
 
@@ -95,6 +94,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import env
+from ..analysis.contracts import check_path_system_batch, checks_enabled
 from .routing import PathSystem
 from ..kernels import ops
 
@@ -111,31 +112,12 @@ __all__ = [
 ]
 
 
-def _read_lp_path_limit() -> int:
-    """``REPRO_LP_PATH_LIMIT``: the throughput() LP-vs-MW cutoff, validated
-    ONCE at import (mirrors REPRO_APSP_BACKEND) so a typo fails loudly at
-    startup rather than silently running every sweep through the wrong
-    solver."""
-    raw = os.environ.get("REPRO_LP_PATH_LIMIT", "").strip()
-    if not raw:
-        return 20000
-    try:
-        limit = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_LP_PATH_LIMIT={raw!r}: expected a non-negative integer "
-            "(paths at or below it go to the exact LP in throughput())"
-        ) from None
-    if limit < 0:
-        raise ValueError(
-            f"REPRO_LP_PATH_LIMIT={limit}: expected a non-negative integer"
-        )
-    return limit
-
-
 #: throughput()'s auto dispatch solves instances with at most this many path
 #: variables exactly (single-core HiGHS needs minutes much beyond ~10k).
-LP_PATH_LIMIT = _read_lp_path_limit()
+#: Validated ONCE at import through the repro.env registry so a typo fails
+#: loudly at startup rather than silently running every sweep through the
+#: wrong solver.
+LP_PATH_LIMIT = env.read("REPRO_LP_PATH_LIMIT")
 
 
 @dataclasses.dataclass
@@ -913,7 +895,7 @@ class PathSystemBatch:
             for i, t in enumerate(otabs):
                 if t is not None:
                     owner_tab[i, : t.shape[0], : t.shape[1]] = t
-        return cls(
+        batch = cls(
             path_edges=pe,
             path_owner=owner,
             demands=dem,
@@ -924,6 +906,9 @@ class PathSystemBatch:
             slot_gather=slot_tab,
             owner_gather=owner_tab,
         )
+        if checks_enabled():
+            check_path_system_batch(batch, name="from_systems")
+        return batch
 
     @classmethod
     def from_shared(
@@ -957,7 +942,7 @@ class PathSystemBatch:
                 slot_tab = np.full((S, d), pe.size, dtype=np.int32)
                 slot_tab[: tab.shape[0], : tab.shape[1]] = tab
                 owner_tab = cls._owner_table(owner, ps.n_commodities, ps.n_paths)
-        return cls(
+        batch = cls(
             path_edges=pe,
             path_owner=owner,
             demands=dem,
@@ -969,6 +954,9 @@ class PathSystemBatch:
             slot_gather=slot_tab,
             owner_gather=owner_tab,
         )
+        if checks_enabled():
+            check_path_system_batch(batch, name="from_shared")
+        return batch
 
 
 def _empty_path_system() -> PathSystem:

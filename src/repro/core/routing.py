@@ -74,11 +74,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import os
 from collections import OrderedDict
 
 import numpy as np
 
+from .. import env
+from ..analysis.contracts import check_path_system, checks_enabled
 from .metrics import (
     INT16_INF,
     apsp_hops,
@@ -141,7 +142,9 @@ def clear_routing_cache() -> None:
 # APSP backend dispatch
 # --------------------------------------------------------------------------- #
 
-APSP_BACKENDS = ("auto", "dense", "blocked", "minplus", "minplus_blocked")
+# Owned by repro.env (the REPRO_APSP_BACKEND registry entry); re-exported
+# here because routing is the module callers know to ask.
+APSP_BACKENDS = env.APSP_BACKENDS
 
 #: Below this size the one-shot dense BLAS BFS beats the blocked/sparse
 #: machinery's per-block overhead; it is also the dense/sparse adjacency
@@ -150,7 +153,7 @@ _BLOCKED_MIN_N = 1536
 
 #: Float32 working-tile budget for the sharded enumerator (distance-row
 #: tiles) and the slack-budget row-power chunks.
-_FRONTIER_TILE_BYTES = int(os.environ.get("REPRO_ROUTE_TILE_BYTES", 256 << 20))
+_FRONTIER_TILE_BYTES = env.read("REPRO_ROUTE_TILE_BYTES")
 
 #: Full (diam+1, N, N) walk-count tables above this are replaced by batched
 #: row powers over just the query pairs (same budgets, no N^3 table).
@@ -178,11 +181,7 @@ def _apsp_platform() -> str:
     return _APSP_PLATFORM
 
 
-_apsp_backend = os.environ.get("REPRO_APSP_BACKEND", "auto").strip().lower() or "auto"
-if _apsp_backend not in APSP_BACKENDS:
-    raise ValueError(
-        f"REPRO_APSP_BACKEND={_apsp_backend!r}: expected one of {APSP_BACKENDS}"
-    )
+_apsp_backend = env.read("REPRO_APSP_BACKEND")
 
 
 def set_apsp_backend(name: str) -> str:
@@ -335,7 +334,9 @@ def _cached_slot_lookup(top: Topology, entry: dict):
         n = top.n_switches
         e = top.edges
         keys = e[:, 0] * n + e[:, 1]  # u < v by Topology invariant
-        order = np.argsort(keys)
+        # JF002: keys are unique, but only kind="stable" makes the order a
+        # pure function of the inputs rather than of numpy's introsort.
+        order = np.argsort(keys, kind="stable")
         entry["slot_keys"] = (keys[order], order.astype(np.int64))
     return entry["slot_keys"]
 
@@ -934,7 +935,7 @@ def build_path_system(
     E = top.n_edges
     pe, path_len, owner, kept = _paths_to_slots(top, entry, all_paths)
     demands = comm.demand[~unrouted].astype(np.float32)
-    return PathSystem(
+    ps = PathSystem(
         n_edges=E,
         path_edges=pe,
         path_len=path_len,
@@ -949,6 +950,9 @@ def build_path_system(
         k=k,
         max_slack=max_slack,
     )
+    if checks_enabled():
+        check_path_system(ps, top, name="build_path_system")
+    return ps
 
 
 def ecmp_path_system(
@@ -1429,7 +1433,7 @@ def update_path_system(
             else:
                 node_paths_new.append(cursor.get(j, []))
 
-    return PathSystem(
+    ps_new = PathSystem(
         n_edges=E_new,
         path_edges=pe_final,
         path_len=len_final,
@@ -1445,3 +1449,6 @@ def update_path_system(
         max_slack=ms,
         row_map=row_map,
     )
+    if checks_enabled():
+        check_path_system(ps_new, top_new, name="update_path_system")
+    return ps_new

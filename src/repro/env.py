@@ -1,0 +1,195 @@
+"""Validated registry for every ``REPRO_*`` environment variable.
+
+PR 3 (``REPRO_APSP_BACKEND``), PR 4 (``REPRO_LP_PATH_LIMIT``) and PR 5
+(``REPRO_SIM_MAX_STEPS`` / ``REPRO_SIM_MAX_BATCH``) each hand-rolled the
+same discipline in their own module: read the knob ONCE at import, and make
+a typo fail loudly at startup with a ``ValueError`` naming the variable —
+never fall back silently mid-sweep.  This module centralizes that registry
+so every knob gets the discipline (``REPRO_ROUTE_TILE_BYTES`` previously
+went through a bare ``int()``), and so the linter can enforce it: rule
+JF003 (``repro.analysis.linter``) forbids direct ``os.environ`` reads of
+``REPRO_*`` anywhere outside this file.
+
+Importing this module validates the ENTIRE registry, so any consumer import
+(``repro.core.routing``, ``repro.core.flow``, ``repro.sim.engine``,
+``benchmarks.common``) surfaces every malformed ``REPRO_*`` value in the
+environment, not just the ones that module happens to read.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable
+
+__all__ = [
+    "APSP_BACKENDS",
+    "EnvSpec",
+    "SPECS",
+    "is_set",
+    "read",
+    "validate_all",
+]
+
+#: APSP backend choices (owned here so the registry can validate
+#: ``REPRO_APSP_BACKEND`` without importing the routing module;
+#: ``repro.core.routing`` re-exports this tuple).
+APSP_BACKENDS = ("auto", "dense", "blocked", "minplus", "minplus_blocked")
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """One registered variable: how to parse it and what it defaults to."""
+
+    name: str
+    parse: Callable[[str, str], Any]  # (name, raw) -> value, raises ValueError
+    default: Any
+    doc: str
+
+    def read(self) -> Any:
+        raw = os.environ.get(self.name, "")
+        if not raw.strip():
+            return self.default
+        return self.parse(self.name, raw.strip())
+
+
+def _parse_int(minimum: int | None = None, maximum: int | None = None,
+               hint: str = ""):
+    def parse(name: str, raw: str) -> int:
+        try:
+            value = int(raw)
+        except ValueError:
+            raise ValueError(
+                f"{name}={raw!r}: expected an integer{hint}"
+            ) from None
+        if minimum is not None and value < minimum:
+            raise ValueError(
+                f"{name}={value}: expected an integer >= {minimum}{hint}"
+            )
+        if maximum is not None and value > maximum:
+            raise ValueError(
+                f"{name}={value}: expected an integer <= {maximum}{hint}"
+            )
+        return value
+
+    return parse
+
+
+def _parse_flag(name: str, raw: str) -> bool:
+    try:
+        return bool(int(raw))
+    except ValueError:
+        raise ValueError(
+            f"{name}={raw!r}: expected an integer flag (0 or 1)"
+        ) from None
+
+
+def _parse_choice(choices: tuple[str, ...]):
+    def parse(name: str, raw: str) -> str:
+        value = raw.strip().lower()
+        if value not in choices:
+            raise ValueError(
+                f"{name}={value!r}: expected one of {choices}"
+            )
+        return value
+
+    return parse
+
+
+def _parse_str(name: str, raw: str) -> str:
+    return raw
+
+
+SPECS: dict[str, EnvSpec] = {
+    spec.name: spec
+    for spec in (
+        EnvSpec(
+            "REPRO_APSP_BACKEND",
+            _parse_choice(APSP_BACKENDS),
+            "auto",
+            "Initial APSP backend (see repro.core.routing.set_apsp_backend).",
+        ),
+        EnvSpec(
+            "REPRO_ROUTE_TILE_BYTES",
+            # Below 1 MiB a tile cannot hold one f32 distance row past
+            # ~16k switches; above 1 TiB the budget is certainly a typo.
+            _parse_int(minimum=1 << 20, maximum=1 << 40,
+                       hint=" (float32 tile budget in bytes, 1 MiB..1 TiB)"),
+            256 << 20,
+            "Float32 working-tile budget for the sharded path enumerator.",
+        ),
+        EnvSpec(
+            "REPRO_LP_PATH_LIMIT",
+            _parse_int(minimum=0, hint=" (paths at or below it go to the "
+                                       "exact LP in throughput())"),
+            20000,
+            "throughput()'s LP-vs-MW cutoff in path variables.",
+        ),
+        EnvSpec(
+            "REPRO_SIM_MAX_STEPS",
+            _parse_int(minimum=1, hint=" (hard cap on the batched sim scan)"),
+            200_000,
+            "Hard cap on a single sim scan's step count.",
+        ),
+        EnvSpec(
+            "REPRO_SIM_MAX_BATCH",
+            _parse_int(minimum=1, hint=" (hard cap on the batched sim scan)"),
+            1024,
+            "Hard cap on the instance batch width of one sim scan.",
+        ),
+        EnvSpec(
+            "REPRO_CHECK",
+            _parse_flag,
+            False,
+            "Enable the runtime contract validators "
+            "(repro.analysis.contracts) at solver boundaries.",
+        ),
+        EnvSpec(
+            "REPRO_BENCH_OUT",
+            _parse_str,
+            "artifacts/bench",
+            "Output directory for benchmark JSON artifacts.",
+        ),
+        EnvSpec(
+            "REPRO_BENCH_FULL",
+            _parse_flag,
+            False,
+            "Run paper-scale benchmark configurations.",
+        ),
+        EnvSpec(
+            "REPRO_BENCH_SMOKE",
+            _parse_flag,
+            False,
+            "Run tiny CI smoke-lane benchmark configurations.",
+        ),
+        EnvSpec(
+            "REPRO_BENCH_XL",
+            _parse_flag,
+            False,
+            "Include the XL rows in the kernel benchmarks.",
+        ),
+    )
+}
+
+
+def read(name: str) -> Any:
+    """Parsed + validated value of a registered variable (or its default)."""
+    return SPECS[name].read()
+
+
+def is_set(name: str) -> bool:
+    """True when the variable is present and non-empty in the environment."""
+    if name not in SPECS:
+        raise KeyError(f"{name} is not a registered REPRO_* variable")
+    return bool(os.environ.get(name, "").strip())
+
+
+def validate_all() -> None:
+    """Parse every registered variable; raise on the first malformed one."""
+    for spec in SPECS.values():
+        spec.read()
+
+
+# A malformed knob anywhere in the environment fails the FIRST repro import,
+# not the Nth module that happens to read it.
+validate_all()

@@ -36,7 +36,41 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["congestion_pallas", "congestion_kernel", "congestion_batch_kernel"]
+__all__ = [
+    "congestion_pallas",
+    "congestion_kernel",
+    "congestion_batch_kernel",
+    "check_congestion_dtype",
+]
+
+
+def check_congestion_dtype(incidence, rates, prices) -> tuple:
+    """Validate congestion operand dtypes before the zero-pad (JF004).
+
+    The incidence matrix is {0,1} and may arrive as bool/int/float — all
+    cast exactly to the kernel's float32 tiles.  Complex or non-numeric
+    operands would be silently truncated by ``astype(float32)`` *after*
+    padding, so they are rejected here with a clear error; float64
+    rates/prices are accepted (the MXU accumulates in f32 anyway) but the
+    cast is explicit and pre-pad rather than incidental.
+    """
+    out = []
+    for label, x in (("incidence", incidence), ("rates", rates),
+                     ("prices", prices)):
+        x = jnp.asarray(x)
+        ok = (
+            jnp.issubdtype(x.dtype, jnp.floating)
+            or jnp.issubdtype(x.dtype, jnp.integer)
+            or jnp.issubdtype(x.dtype, jnp.bool_)
+        )
+        if not ok:
+            raise ValueError(
+                f"congestion {label} must be bool/integer/floating "
+                f"(got {x.dtype}): the fused kernel computes in float32 and "
+                "anything else would be silently truncated by the cast"
+            )
+        out.append(x.astype(jnp.float32))
+    return tuple(out)
 
 
 def congestion_kernel(b_ref, r_ref, w_ref, loads_ref, costs_ref):
@@ -92,10 +126,11 @@ def _congestion_pallas_batch(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     Bt, P, E = incidence.shape
+    incidence, rates, prices = check_congestion_dtype(incidence, rates, prices)
     pp, ep = (-P) % bp, (-E) % be
-    b_p = jnp.pad(incidence.astype(jnp.float32), ((0, 0), (0, pp), (0, ep)))
-    r_p = jnp.pad(rates.astype(jnp.float32), ((0, 0), (0, pp)))[:, None, :]
-    w_p = jnp.pad(prices.astype(jnp.float32), ((0, 0), (0, ep)))[:, None, :]
+    b_p = jnp.pad(incidence, ((0, 0), (0, pp), (0, ep)))
+    r_p = jnp.pad(rates, ((0, 0), (0, pp)))[:, None, :]
+    w_p = jnp.pad(prices, ((0, 0), (0, ep)))[:, None, :]
     _, Pp, Ep = b_p.shape
     loads, costs = pl.pallas_call(
         congestion_batch_kernel,
@@ -143,10 +178,11 @@ def congestion_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     P, E = incidence.shape
+    incidence, rates, prices = check_congestion_dtype(incidence, rates, prices)
     pp, ep = (-P) % bp, (-E) % be
-    b_p = jnp.pad(incidence.astype(jnp.float32), ((0, pp), (0, ep)))
-    r_p = jnp.pad(rates.astype(jnp.float32), (0, pp))[None, :]  # (1, Pp)
-    w_p = jnp.pad(prices.astype(jnp.float32), (0, ep))[None, :]  # (1, Ep)
+    b_p = jnp.pad(incidence, ((0, pp), (0, ep)))
+    r_p = jnp.pad(rates, (0, pp))[None, :]  # (1, Pp)
+    w_p = jnp.pad(prices, (0, ep))[None, :]  # (1, Ep)
     Pp, Ep = b_p.shape
     loads, costs = pl.pallas_call(
         congestion_kernel,

@@ -19,7 +19,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["matmul_pallas", "matmul_kernel"]
+__all__ = ["matmul_pallas", "matmul_kernel", "check_matmul_dtype"]
+
+
+def check_matmul_dtype(*arrays) -> tuple:
+    """Validate/upcast matmul operand dtypes before the zero-pad (JF004).
+
+    The MXU path accumulates in float32; integer/bool operands would hit
+    the systolic array with an unsupported element type only after the
+    tiles were already padded, so they are rejected at entry with a clear
+    error, and half-precision floats are upcast to float32 (mirrors
+    ``minplus.check_minplus_dtype``).
+    """
+    out = []
+    for x in arrays:
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            raise ValueError(
+                f"matmul operands must be floating point (got {x.dtype}): "
+                "cast explicitly before calling matmul_pallas"
+            )
+        if x.dtype in (jnp.float16, jnp.bfloat16):
+            x = x.astype(jnp.float32)
+        out.append(x)
+    return tuple(out)
 
 
 def matmul_kernel(a_ref, b_ref, o_ref):
@@ -51,6 +74,7 @@ def matmul_pallas(
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    a, b = check_matmul_dtype(a, b)
     mp, np_, kp = (-m) % bm, (-n) % bn, (-k) % bk
     a_p = jnp.pad(a, ((0, mp), (0, kp)))
     b_p = jnp.pad(b, ((0, kp), (0, np_)))

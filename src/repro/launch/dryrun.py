@@ -1,11 +1,31 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count=512"
+_existing_xla_flags = os.environ.get("XLA_FLAGS", "").strip()
+if "--xla_force_host_platform_device_count" in _existing_xla_flags:
+    import warnings
+
+    warnings.warn(
+        "XLA_FLAGS already sets --xla_force_host_platform_device_count; "
+        f"repro.launch.dryrun is overriding it with {_DEVICE_COUNT_FLAG} "
+        "(the module simulates a fixed 512-device host topology)",
+        stacklevel=2,
+    )
+    _existing_xla_flags = " ".join(
+        f for f in _existing_xla_flags.split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    )
+os.environ["XLA_FLAGS"] = (
+    f"{_existing_xla_flags} {_DEVICE_COUNT_FLAG}".strip()
+)
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST run before any jax import (jax locks the device
-count on first init); this module therefore imports everything lazily below
-them.  Usage:
+The XLA_FLAGS setup above MUST run before any jax import (jax locks the
+device count on first init); this module therefore imports everything
+lazily below it.  Unlike the original one-liner it APPENDS to any
+XLA_FLAGS already in the environment instead of clobbering them, and warns
+when it has to override a conflicting device-count flag.  Usage:
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all            # resumable

@@ -42,7 +42,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 from typing import Sequence
 
 import numpy as np
@@ -50,9 +49,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import env
+from ..analysis.contracts import check_sim_state, checks_enabled
 from ..core.flow import (
     PathSystem,
     PathSystemBatch,
+    _fold_sum,
     _resolve_backend,
     make_loads_fn_batch,
 )
@@ -69,32 +71,12 @@ __all__ = [
 ]
 
 
-def _read_sim_env(name: str, default: int) -> int:
-    """``REPRO_SIM_*`` caps, validated ONCE at import (the
-    REPRO_APSP_BACKEND / REPRO_LP_PATH_LIMIT discipline): a typo must fail
-    loudly at startup, not silently fall back mid-sweep."""
-    raw = os.environ.get(name, "").strip()
-    if not raw:
-        return default
-    try:
-        value = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"{name}={raw!r}: expected a positive integer "
-            "(hard cap on the batched sim scan)"
-        ) from None
-    if value < 1:
-        raise ValueError(
-            f"{name}={value}: expected a positive integer "
-            "(hard cap on the batched sim scan)"
-        )
-    return value
-
-
 #: Hard cap on a single scan's step count (compile + unrolled-carry guard).
-SIM_MAX_STEPS = _read_sim_env("REPRO_SIM_MAX_STEPS", 200_000)
+#: Validated ONCE at import through the repro.env registry: a typo must
+#: fail loudly at startup, not silently fall back mid-sweep.
+SIM_MAX_STEPS = env.read("REPRO_SIM_MAX_STEPS")
 #: Hard cap on the instance batch width of one scan.
-SIM_MAX_BATCH = _read_sim_env("REPRO_SIM_MAX_BATCH", 1024)
+SIM_MAX_BATCH = env.read("REPRO_SIM_MAX_BATCH")
 
 POLICIES = ("ecmp", "ksp_lc", "mptcp")
 
@@ -606,7 +588,10 @@ def _sim_scan(
         rem = rem - delivered
         age = jnp.where(active, age + 1.0, age)
         done = active & (rem <= 1e-6)
-        fct_sum = fct_sum + jnp.sum(jnp.where(done, age * dt, 0.0), axis=1)
+        # JF005: _fold_sum, not jnp.sum — F is a padded axis (empty slots
+        # contribute exact zeros) and the FCT sum must not depend on the
+        # max_flows envelope the run happened to compile with.
+        fct_sum = fct_sum + _fold_sum(jnp.where(done, age * dt, 0.0))
         fct_cnt = fct_cnt + done.sum(axis=1)
         bins = jnp.clip(
             jnp.floor(jnp.log2(jnp.maximum(age, 1.0))).astype(jnp.int32),
@@ -754,7 +739,7 @@ def simulate(
     )
     (_, _, _, _, _, fct_hist, fct_sum, fct_cnt, comm_del, comm_off,
      util_sum, drops, admitted) = carry
-    return SimResult(
+    result = SimResult(
         throughput=np.asarray(thr),
         active=np.asarray(nact),
         fct_hist=np.asarray(fct_hist)[:, : cfg.nbins],
@@ -772,3 +757,6 @@ def simulate(
         policy=policy,
         backend=backend,
     )
+    if checks_enabled():
+        check_sim_state(result)
+    return result

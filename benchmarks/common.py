@@ -10,13 +10,16 @@ import numpy as np
 
 from repro.core import (
     build_path_system,
+    build_path_system_batch,
     jellyfish_heterogeneous,
     lp_concurrent_flow,
     max_feasible,
     mw_concurrent_flow,
     mw_concurrent_flow_batch,
+    pipeline_enabled,
     random_permutation_traffic,
     speculative_max_feasible,
+    stream_builds,
 )
 from repro import env
 from repro.core.flow import LP_PATH_LIMIT
@@ -116,6 +119,46 @@ def jellyfish_same_equipment(n_switches: int, ports: int, n_servers: int, seed=0
     )
 
 
+def _probe_systems(top, n_matrices, k):
+    """One probe's path systems, traffic seeds 0..n_matrices-1, slack=3.
+
+    With the build pipeline enabled (``REPRO_BUILD_PIPELINE``, default on)
+    all of a probe's matrices build as ONE ``build_path_system_batch`` —
+    one combined frontier pass instead of n_matrices separate ones.  The
+    batch builder's bit-exactness contract (INVARIANTS.md CT-build) makes
+    the returned systems byte-identical to the sequential loop, so every
+    downstream verdict is unchanged.
+    """
+    if pipeline_enabled():
+        comms = [
+            random_permutation_traffic(top, seed=s) for s in range(n_matrices)
+        ]
+        batch = build_path_system_batch(
+            [top] * n_matrices, comms, k=k, max_slack=3
+        )
+        return list(batch.systems)
+    # lazy fallback: the LP short-circuit in _probe_verdict stops building
+    # the moment a matrix rejects the probe, exactly as the pre-pipeline
+    # driver did
+    return (
+        build_path_system(
+            top, random_permutation_traffic(top, seed=s), k=k, max_slack=3
+        )
+        for s in range(n_matrices)
+    )
+
+
+def _probe_verdict(systems, tol, method):
+    """LP short-circuit + MW deferral over already-built probe systems."""
+    mw_systems = []
+    for ps in systems:
+        if _wants_mw(ps, method):
+            mw_systems.append(ps)
+        elif lp_concurrent_flow(ps).alpha < 1.0 - tol:
+            return False, mw_systems
+    return True, mw_systems
+
+
 def _probe_matrices(top, n_matrices, k, tol, method):
     """The full-capacity probe body shared by the sequential and wave
     drivers — ONE copy, so their per-(candidate, seed, matrix) decisions
@@ -127,15 +170,7 @@ def _probe_matrices(top, n_matrices, k, tol, method):
     caller to fold into a single batched solve.  slack=3 matches the
     alpha_of probe this replaced.  Returns ``(lp_ok, mw_systems)``.
     """
-    mw_systems = []
-    for s in range(n_matrices):
-        comm = random_permutation_traffic(top, seed=s)
-        ps = build_path_system(top, comm, k=k, max_slack=3)
-        if _wants_mw(ps, method):
-            mw_systems.append(ps)
-        elif lp_concurrent_flow(ps).alpha < 1.0 - tol:
-            return False, mw_systems
-    return True, mw_systems
+    return _probe_verdict(_probe_systems(top, n_matrices, k), tol, method)
 
 
 def supports_full_capacity(top, n_matrices=3, k=8, tol=1e-6,
@@ -200,15 +235,30 @@ def max_servers_at_full_capacity(
     def ok_batch(candidates):
         verdicts = [True] * len(candidates)
         mw_systems, owner = [], []
-        for ci, m in enumerate(candidates):
-            for seed in seeds:
-                top = jellyfish_same_equipment(n_switches, ports, m, seed=seed)
-                lp_ok, mws = _probe_matrices(top, n_matrices, k, tol, method)
-                mw_systems.extend(mws)
-                owner.extend([ci] * len(mws))
-                if not lp_ok:
-                    verdicts[ci] = False
-                    break  # an LP matrix rejected this candidate
+        # one build unit per (candidate, seed); with the pipeline enabled
+        # stream_builds prefetches unit i+1 on the background worker while
+        # the consumer runs unit i's LP verdicts, so host enumeration
+        # overlaps the probe solves.  Results arrive in submission order,
+        # so the verdict fold below is the sequential loop verbatim.
+        tasks = [(ci, m, seed) for ci, m in enumerate(candidates)
+                 for seed in seeds]
+
+        def build_thunk(m, seed):
+            def thunk():
+                top = jellyfish_same_equipment(n_switches, ports, m,
+                                               seed=seed)
+                return _probe_systems(top, n_matrices, k)
+            return thunk
+
+        stream = stream_builds(build_thunk(m, seed) for _, m, seed in tasks)
+        for (ci, m, seed), systems in zip(tasks, stream):
+            if not verdicts[ci]:
+                continue  # an earlier LP matrix rejected this candidate
+            lp_ok, mws = _probe_verdict(systems, tol, method)
+            mw_systems.extend(mws)
+            owner.extend([ci] * len(mws))
+            if not lp_ok:
+                verdicts[ci] = False
         # LP-rejected candidates' MW systems are dead weight: solving them
         # burns a full target_alpha=1.0 budget and inflates the batch's
         # common padding envelope for the surviving probes

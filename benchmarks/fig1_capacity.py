@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import bollobas_bound, fattree_equipment
+from repro.core import bollobas_bound, fattree_equipment, set_build_pipeline
 from repro.core.routing import clear_routing_cache
 
 from .common import FULL, Timer, csv_row, max_servers_at_full_capacity, save
@@ -99,12 +99,53 @@ def fig1c_speculative_parity() -> dict:
     }
 
 
+def fig1c_pipeline_parity() -> dict:
+    """Pipelined/batched builds must land on the sequential-build driver's
+    exact server count — the batch builder's bit-exactness contract
+    (INVARIANTS.md CT-build) means every probe sees byte-identical path
+    systems, so any divergence here is a real defect, not noise.  Records
+    both answers and wall-clocks for the k=4 equivalent; the bench ASSERTS
+    the identity rather than just reporting it."""
+    eq = fattree_equipment(4)
+    args = dict(lo=eq["servers"] // 2, hi=2 * eq["servers"], seeds=(0,))
+    # cold start per leg, same discipline as fig1c_speculative_parity
+    max_servers_at_full_capacity(eq["switches"], eq["ports_per_switch"], **args)
+    clear_routing_cache()
+    prev = set_build_pipeline(False)
+    try:
+        with Timer() as t_seq:
+            seq = max_servers_at_full_capacity(
+                eq["switches"], eq["ports_per_switch"], **args
+            )
+        clear_routing_cache()
+        set_build_pipeline(True)
+        with Timer() as t_pipe:
+            pipe = max_servers_at_full_capacity(
+                eq["switches"], eq["ports_per_switch"], **args
+            )
+        clear_routing_cache()
+    finally:
+        set_build_pipeline(prev)
+    assert pipe == seq, (
+        f"pipelined build driver found {pipe} servers, sequential {seq}"
+    )
+    return {
+        "sequential_servers": seq,
+        "pipelined_servers": pipe,
+        "identical": seq == pipe,
+        "sequential_s": round(t_seq.dt, 2),
+        "pipelined_s": round(t_pipe.dt, 2),
+    }
+
+
 def run() -> list[str]:
     ab = fig1ab()
     rows = fig1c()
     spec = fig1c_speculative_parity()
+    pipe = fig1c_pipeline_parity()
     save("fig1ab_bisection_curves", ab)
-    save("fig1c_servers_at_capacity", {"rows": rows, "speculative": spec})
+    save("fig1c_servers_at_capacity",
+         {"rows": rows, "speculative": spec, "pipeline": pipe})
     out = []
     for r in rows:
         out.append(
@@ -122,6 +163,16 @@ def run() -> list[str]:
             f"seq={spec['sequential_servers']}"
             f";wave={spec['speculative_servers']}"
             f";identical={spec['identical']}",
+        )
+    )
+    out.append(
+        csv_row(
+            "fig1c_pipeline_parity",
+            pipe["pipelined_s"] * 1e6,
+            f"seq={pipe['sequential_servers']}"
+            f";pipe={pipe['pipelined_servers']}"
+            f";identical={pipe['identical']}"
+            f";seq_s={pipe['sequential_s']}",
         )
     )
     return out

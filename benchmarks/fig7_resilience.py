@@ -24,35 +24,55 @@ import numpy as np
 
 from repro.core import (
     build_path_system,
+    build_path_system_batch,
     fail_links,
     fattree,
     fattree_equipment,
     jellyfish,
+    pipeline_enabled,
     random_permutation_traffic,
+    stream_builds,
     update_path_system,
 )
 
 from .common import Timer, batch_alphas, csv_row, jellyfish_same_equipment, save
 
 
+def _build_many(tops, comms, k: int, slack: int, cache: bool = True) -> list:
+    """B path systems — one batched build when the pipeline is enabled
+    (``REPRO_BUILD_PIPELINE``, default on), else the sequential loop.  The
+    batch builder's CT-build contract makes both byte-identical."""
+    if pipeline_enabled():
+        return list(build_path_system_batch(
+            tops, comms, k=k, max_slack=slack, cache=cache
+        ).systems)
+    return [build_path_system(t, c, k=k, max_slack=slack, cache=cache)
+            for t, c in zip(tops, comms)]
+
+
 def _incremental_fail_sweeps(top, fractions, seeds, k: int, slack: int) -> list[dict]:
     """Cumulatively fail links for several sweep seeds in lockstep,
     delta-updating each seed's path system per level and evaluating every
-    level's (delta + rebuild) systems in one batched alpha call."""
+    level's (delta + rebuild) systems in one batched alpha call.  All of a
+    level's rebuild cross-checks (distinct failed topologies) go through
+    one ``build_path_system_batch`` call; the first level also bit-checks
+    the batched rebuild against a sequential build in-bench."""
+    comms = [random_permutation_traffic(top, seed=seed) for seed in seeds]
+    with Timer() as t_b:
+        systems = _build_many([top] * len(comms), comms, k, slack)
+    per_build = t_b.dt / max(len(comms), 1)
     states = []
-    for seed in seeds:
-        rng = np.random.default_rng(seed)
-        comm = random_permutation_traffic(top, seed=seed)
-        with Timer() as t_b:
-            ps = build_path_system(top, comm, k=k, max_slack=slack)
+    for seed, comm, ps in zip(seeds, comms, systems):
         states.append({
-            "rng": rng, "comm": comm, "ps": ps, "cur": top, "removed": 0,
-            "t_delta": t_b.dt, "t_full": t_b.dt, "alphas": {}, "parity": 0.0,
+            "rng": np.random.default_rng(seed), "comm": comm, "ps": ps,
+            "cur": top, "removed": 0, "t_delta": per_build,
+            "t_full": per_build, "alphas": {}, "parity": 0.0,
         })
     e0 = top.n_edges
     cur_alpha = batch_alphas([st["ps"] for st in states])
+    build_parity_pending = pipeline_enabled()
     for f in fractions:
-        changed = []
+        changed, nxts = [], []
         for si, st in enumerate(states):
             need = int(round(f * e0)) - st["removed"]
             if need > 0:
@@ -61,15 +81,36 @@ def _incremental_fail_sweeps(top, fractions, seeds, k: int, slack: int) -> list[
                     st["ps"] = update_path_system(st["ps"], st["cur"], nxt,
                                                   st["comm"])
                 st["t_delta"] += t_u.dt
-                with Timer() as t_f:
-                    st["ps_full"] = build_path_system(
-                        nxt, st["comm"], k=k, max_slack=slack, cache=False
-                    )
-                st["t_full"] += t_f.dt
                 st["cur"] = nxt
                 st["removed"] += need
                 changed.append(si)
+                nxts.append(nxt)
         if changed:
+            with Timer() as t_f:
+                rebuilds = _build_many(
+                    nxts, [states[si]["comm"] for si in changed], k, slack,
+                    cache=False,
+                )
+            per_full = t_f.dt / len(changed)
+            for si, ps_full in zip(changed, rebuilds):
+                states[si]["ps_full"] = ps_full
+                states[si]["t_full"] += per_full
+            if build_parity_pending:
+                # batched rebuild vs legacy sequential build: byte parity
+                build_parity_pending = False
+                si = changed[0]
+                ps_seq = build_path_system(
+                    states[si]["cur"], states[si]["comm"], k=k,
+                    max_slack=slack, cache=False,
+                )
+                assert (
+                    np.array_equal(np.asarray(ps_seq.path_edges),
+                                   np.asarray(rebuilds[0].path_edges))
+                    and np.array_equal(np.asarray(ps_seq.path_len),
+                                       np.asarray(rebuilds[0].path_len))
+                    and np.array_equal(np.asarray(ps_seq.path_owner),
+                                       np.asarray(rebuilds[0].path_owner))
+                ), "pipelined batch build diverged from sequential build"
             # one batched evaluation per level: each changed seed's delta
             # system and its from-scratch rebuild (the parity cross-check)
             a = batch_alphas(
@@ -121,15 +162,27 @@ def run() -> list[str]:
     #   raw capacity (uncapped alpha) and the paper's plotted metric,
     #   normalized per-server throughput (capped at line rate).
     raw_drops, norm_after = [], []
-    for tseed in (1, 2, 3):
-        top = jellyfish(120, 13, 10, seed=tseed)
-        failed = fail_links(top, 0.15, seed=90 + tseed)
+    tseeds = (1, 2, 3)
+
+    def claim15_build(tseed):
+        def thunk():
+            top = jellyfish(120, 13, 10, seed=tseed)
+            failed = fail_links(top, 0.15, seed=90 + tseed)
+            comms = [random_permutation_traffic(top, seed=s) for s in range(2)]
+            return top, failed, comms, _build_many([top] * 2, comms, 8, 4)
+        return thunk
+
+    # stream_builds prefetches tseed t+1's intact builds on the worker
+    # while this thread repairs + solves tseed t; the consumer-side repairs
+    # run cache=False so the routing cache stays single-writer (the worker)
+    # for the duration of the stream
+    for top, failed, comms, intact in stream_builds(
+        claim15_build(t) for t in tseeds
+    ):
         systems = []
-        for s in range(2):
-            comm = random_permutation_traffic(top, seed=s)
-            ps = build_path_system(top, comm, k=8, max_slack=4)
+        for comm, ps in zip(comms, intact):
             # the failed fabric reuses the intact fabric's routing state
-            ps_f = update_path_system(ps, top, failed, comm)
+            ps_f = update_path_system(ps, top, failed, comm, cache=False)
             systems.extend([ps, ps_f])
         # the tseed's four (intact, failed) x matrix solves in one batch
         a = batch_alphas(systems)

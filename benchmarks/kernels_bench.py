@@ -23,6 +23,7 @@ from repro.core import (
     apsp_hops,
     apsp_hops_blocked,
     build_path_system,
+    build_path_system_batch,
     extend_server_permutation,
     hops_to_int16,
     jellyfish,
@@ -33,9 +34,11 @@ from repro.core import (
     random_permutation_traffic,
     random_server_permutation,
     spectral_lambda2,
+    stream_builds,
     update_path_system,
 )
 from repro.core import fattree_equipment, max_feasible, mw_concurrent_flow_batch
+from repro.core.flow import _fold_sum, _path_cost_gather
 from repro.core.routing import _k_shortest_paths_dfs, clear_routing_cache
 from repro.kernels import ops
 
@@ -158,6 +161,118 @@ def _mw_batch_row(n_batch: int, n: int = 512, ports: int = 24, r_net: int = 18,
             max(abs(s.alpha - b.alpha) for s, b in zip(seq, bat))
         ),
         "backend": bat[0].method,
+    }
+
+
+@jax.jit
+def _costs_flat(pr_pad, path_edges):
+    """The replaced congestion-cost form: ONE wide (B, P*L) gather, then
+    the rank-3 reshape + fold (materializes the (B, P, L) intermediate)."""
+    b, p, l = path_edges.shape
+    flat = jnp.take_along_axis(pr_pad, path_edges.reshape(b, p * l), axis=1)
+    return _fold_sum(flat.reshape(b, p, l))
+
+
+_costs_cols = jax.jit(_path_cost_gather)
+
+
+def _build_batch_row(n_batch: int, n: int = 512, ports: int = 48,
+                     r_net: int = 36, k: int = 8) -> dict:
+    """Batched vs sequential path-system construction on n_batch instances.
+
+    The _mw_batch_row workload (distinct topology seeds, distinct traffic)
+    one rung earlier in the stack: the cross-instance builder must match B
+    sequential builds BYTE-for-byte (CT-build) while its block-local shard
+    tiles hold the tracemalloc peak near the single-instance envelope —
+    composing B instances never materializes a B-wide tile or matrix.
+    Time and peak come from separate calls (``_timed_peak``); both legs run
+    cold (the routing cache is cleared inside each timed build).
+    """
+    tops = [jellyfish(n, ports, r_net, seed=100 + s) for s in range(n_batch)]
+    comms = [random_permutation_traffic(t, seed=s)
+             for s, t in enumerate(tops)]
+
+    def _seq():
+        clear_routing_cache()
+        return [build_path_system(t, c, k=k) for t, c in zip(tops, comms)]
+
+    def _bat():
+        clear_routing_cache()
+        return build_path_system_batch(tops, comms, k=k)
+
+    seq, t_seq, peak_seq = _timed_peak(_seq)
+    bat, t_bat, peak_bat = _timed_peak(_bat)
+    identical = all(
+        np.array_equal(np.asarray(a.path_edges), np.asarray(b.path_edges))
+        and np.array_equal(np.asarray(a.path_len), np.asarray(b.path_len))
+        and np.array_equal(np.asarray(a.path_owner), np.asarray(b.path_owner))
+        for a, b in zip(seq, bat.systems)
+    )
+    clear_routing_cache()
+    return {
+        "n_batch": n_batch, "n": n, "k": k,
+        "sequential_s": t_seq, "batch_s": t_bat,
+        "speedup": t_seq / max(t_bat, 1e-12),
+        "sequential_peak_bytes": int(peak_seq),
+        "batch_peak_bytes": int(peak_bat),
+        "identical": bool(identical),
+    }
+
+
+def _pipelined_sweep_row(n_units: int = 6, n: int = 40, ports: int = 10,
+                         r_net: int = 7, n_matrices: int = 72,
+                         k: int = 8) -> dict:
+    """fig1c-style build-dominated probe sweep: W candidate topologies x B
+    probe matrices each, one LP verdict per unit.
+
+    The pipelined driver batches each unit's B builds into ONE
+    cross-instance enumeration (a unit's probe matrices share a topology,
+    so their pair sets dedup to the union — the batch builder's best
+    regime) and double-buffers: ``stream_builds`` runs unit w+1's host
+    enumeration on the worker while the consumer LP-solves unit w.  The
+    sequential-build driver is the SAME sweep with the pipeline disabled —
+    B inline builds per unit, no overlap.  Per-unit verdicts must be
+    IDENTICAL (CT-build: byte-identical systems -> the same LP instance,
+    asserted here); the >= 2x end-to-end speedup is the acceptance number
+    of the pipelined-construction rung on this box.
+    """
+
+    def _run(pipelined: bool) -> list[float]:
+        def unit_thunk(w):
+            def thunk():
+                top = jellyfish(n, ports, r_net, seed=w)
+                comms = [random_permutation_traffic(top, seed=s)
+                         for s in range(n_matrices)]
+                if pipelined:
+                    return build_path_system_batch(
+                        [top] * n_matrices, comms, k=k
+                    ).systems
+                return [build_path_system(top, c, k=k) for c in comms]
+            return thunk
+
+        alphas = []
+        for systems in stream_builds(
+            (unit_thunk(w) for w in range(n_units)), enabled=pipelined
+        ):
+            alphas.append(float(lp_concurrent_flow(systems[0]).alpha))
+        return alphas
+
+    _run(True)  # warm HiGHS/scipy one-time costs out of both legs
+    clear_routing_cache()
+    with Timer() as t_seq:
+        a_seq = _run(False)
+    clear_routing_cache()
+    with Timer() as t_pipe:
+        a_pipe = _run(True)
+    clear_routing_cache()
+    assert a_seq == a_pipe, (
+        "pipelined sweep verdicts diverged from sequential builds"
+    )
+    return {
+        "units": n_units, "n": n, "n_matrices": n_matrices, "k": k,
+        "sequential_s": t_seq.dt, "pipelined_s": t_pipe.dt,
+        "speedup": t_seq.dt / max(t_pipe.dt, 1e-12),
+        "identical": True,
     }
 
 
@@ -320,6 +435,64 @@ def run() -> list[str]:
     )
     results["bisection_batched_mw"] = spec
 
+    # pipelined multi-instance construction: the cross-instance batch
+    # builder vs B sequential builds (tracked: wall-clock, tracemalloc
+    # peak, and byte parity — the CT-build contract on real workloads)
+    for nb in (4, 16):
+        brow = _build_batch_row(nb)
+        out.append(
+            csv_row(
+                f"build_batch_{nb}x512", brow["batch_s"] * 1e6,
+                f"{brow['speedup']:.2f}x_vs_{nb}_sequential "
+                f"peak={brow['batch_peak_bytes']/2**20:.0f}MiB"
+                f"(seq={brow['sequential_peak_bytes']/2**20:.0f}) "
+                f"identical={brow['identical']}",
+            )
+        )
+        results[f"build_batch_{nb}x512"] = brow
+
+    # the build-dominated sweep acceptance: pipelined (batched builds +
+    # host double-buffering) vs the sequential-build driver, >= 2x
+    sweep = _pipelined_sweep_row()
+    out.append(
+        csv_row(
+            "build_pipeline_sweep", sweep["pipelined_s"] * 1e6,
+            f"{sweep['speedup']:.2f}x_vs_sequential_builds "
+            f"seq={sweep['sequential_s']:.1f}s "
+            f"identical={sweep['identical']}",
+        )
+    )
+    results["build_pipeline_sweep"] = sweep
+
+    # XLA:CPU gather gotcha headroom (_path_min_gather's sibling for the
+    # ordered sum): the wide (B, P*L) take_along_axis materializes the
+    # rank-3 intermediate before folding, where L narrow per-column gathers
+    # combined by a positional halving tree over the column list never do —
+    # 3-10x at solver shapes, with the identical fold association
+    # (bit-exactness asserted here)
+    grng = np.random.default_rng(0)
+    gb, gp, gl, ge = 8, 4096, 6, 4096
+    g_pr = jnp.asarray(grng.random((gb, ge + 1), dtype=np.float32))
+    g_pe = jnp.asarray(
+        grng.integers(0, ge + 1, (gb, gp, gl)), dtype=jnp.int32
+    )
+    t_gflat = _time(lambda: _costs_flat(g_pr, g_pe).block_until_ready())
+    t_gcols = _time(lambda: _costs_cols(g_pr, g_pe).block_until_ready())
+    g_equal = bool(
+        jnp.array_equal(_costs_flat(g_pr, g_pe), _costs_cols(g_pr, g_pe))
+    )
+    out.append(
+        csv_row(
+            "path_cost_gather_8x4096", t_gcols * 1e6,
+            f"flat={t_gflat*1e3:.1f}ms cols={t_gcols*1e3:.1f}ms "
+            f"{t_gflat/max(t_gcols, 1e-12):.1f}x identical={g_equal}",
+        )
+    )
+    results["path_cost_gather"] = {
+        "shape": [gb, gp, gl], "flat_s": t_gflat, "per_column_s": t_gcols,
+        "speedup": t_gflat / max(t_gcols, 1e-12), "identical": g_equal,
+    }
+
     if not SMOKE:
         big = _delta_routing_chain(256, 24, 18, steps=12)
         out.append(
@@ -447,6 +620,38 @@ def run() -> list[str]:
             "dist_state_bytes": int(8192 * 8192 * 2),
             "ru_maxrss_mb": _ru_maxrss_mb(),
         }
+        clear_routing_cache()
+
+        # the pipelined-builder scale envelope: TWO probe matrices on one
+        # RRG(10240, 48, 36) (= 123k servers) built as a single
+        # cross-instance batch.  Distance state is one N^2 int16 (200 MiB)
+        # shared by both instances; block-local shard tiles keep the f32
+        # working set at the REPRO_ROUTE_TILE_BYTES budget no matter how
+        # many instances compose (the composed id space never materializes)
+        x2 = jellyfish(10240, 48, 36, seed=0)
+        x2c = [random_permutation_traffic(x2, seed=s) for s in (1, 2)]
+
+        def _x2_build():
+            clear_routing_cache()  # each _timed_peak call must do full work
+            return build_path_system_batch([x2, x2], x2c, k=8)
+
+        x2b, t_x2, peak_x2 = _timed_peak(_x2_build)
+        out.append(
+            csv_row(
+                "build_batch_2x10240", t_x2 * 1e6,
+                f"P={int(np.asarray(x2b.n_paths).sum())} "
+                f"peak={peak_x2/2**30:.2f}GiB "
+                f"rss={_ru_maxrss_mb():.0f}MiB",
+            )
+        )
+        results["build_batch_2x10240"] = {
+            "build_s": t_x2,
+            "n_paths": int(np.asarray(x2b.n_paths).sum()),
+            "tracemalloc_peak_bytes": int(peak_x2),
+            "dist_state_bytes": int(10240 * 10240 * 2),
+            "ru_maxrss_mb": _ru_maxrss_mb(),
+        }
+        del x2b
         clear_routing_cache()
 
         # batched MW at the scale envelope: B=4 x RRG(2048, 48, 36)

@@ -28,6 +28,7 @@ from .. import env
 
 __all__ = [
     "ContractViolation",
+    "check_built_batch",
     "check_hop_matrix",
     "check_path_system",
     "check_path_system_batch",
@@ -446,6 +447,25 @@ def check_path_system_batch(batch, *, name: str = "path_system_batch",
                 _fail(name, f"owner_gather[{i}, {int(k_idx[j])}, "
                             f"{int(d_idx[j])}] points at a row of commodity "
                             f"{int(own[i, tabs[i, k_idx[j], d_idx[j]]])}")
+
+
+def check_built_batch(batch, tops, *, name: str = "build_path_system_batch",
+                      max_instances: int = 16) -> None:
+    """Validate a directly-constructed batch at the builder boundary.
+
+    ``build_path_system_batch`` composes B instances into one enumeration
+    pass and assembles the envelope straight from the streamed per-instance
+    systems, so the batch-level padding/gather discipline
+    (``check_path_system_batch``) AND each member system's own invariants
+    — including the canonical (length, lex) tie order that the
+    batch == sequential bit-exactness contract (CT-build) rests on — are
+    established *here*, not at B separate ``build_path_system`` exits.
+    Per-instance decode work is bounded by ``max_instances`` exactly as in
+    ``check_path_system_batch``.
+    """
+    check_path_system_batch(batch, name=name, max_instances=max_instances)
+    for i, (ps, top) in enumerate(zip(batch.systems[:max_instances], tops)):
+        check_path_system(ps, top, name=f"{name}[instance {i}]")
 
 
 # --------------------------------------------------------------------------- #

@@ -27,6 +27,7 @@ from .flow import (
     mw_concurrent_flow_batch,
     throughput,
 )
+from .buildpipe import pipeline_enabled, set_build_pipeline, stream_builds
 from .jellyfish import jellyfish, jellyfish_heterogeneous, rrg
 from .legup import CostModel, ExpansionStage, jellyfish_arc, legup_arc
 from .metrics import (
@@ -44,8 +45,10 @@ from .placement import CablePlan, localized_jellyfish, plan_cables
 from .routing import (
     PathSystem,
     build_path_system,
+    build_path_system_batch,
     ecmp_path_system,
     k_shortest_paths,
+    set_admission_backend,
     set_apsp_backend,
     update_path_system,
 )
@@ -84,8 +87,10 @@ __all__ = [
     "Commodities", "random_permutation_traffic", "all_to_all_traffic",
     "random_server_permutation", "extend_server_permutation",
     "permutation_commodities", "union_commodities",
-    "PathSystem", "build_path_system", "ecmp_path_system", "k_shortest_paths",
-    "update_path_system", "set_apsp_backend",
+    "PathSystem", "build_path_system", "build_path_system_batch",
+    "ecmp_path_system", "k_shortest_paths",
+    "update_path_system", "set_apsp_backend", "set_admission_backend",
+    "pipeline_enabled", "set_build_pipeline", "stream_builds",
     "FlowResult", "PathSystemBatch", "mw_concurrent_flow",
     "mw_concurrent_flow_batch", "lp_concurrent_flow",
     "lp_edge_concurrent_flow", "throughput",

@@ -79,7 +79,11 @@ from collections import OrderedDict
 import numpy as np
 
 from .. import env
-from ..analysis.contracts import check_path_system, checks_enabled
+from ..analysis.contracts import (
+    check_built_batch,
+    check_path_system,
+    checks_enabled,
+)
 from .metrics import (
     INT16_INF,
     apsp_hops,
@@ -96,11 +100,14 @@ __all__ = [
     "PathSystem",
     "k_shortest_paths",
     "build_path_system",
+    "build_path_system_batch",
     "ecmp_path_system",
     "update_path_system",
     "clear_routing_cache",
     "set_apsp_backend",
+    "set_admission_backend",
     "APSP_BACKENDS",
+    "ADMISSION_BACKENDS",
 ]
 
 
@@ -200,6 +207,63 @@ def set_apsp_backend(name: str) -> str:
         raise ValueError(f"unknown APSP backend {name!r}: expected {APSP_BACKENDS}")
     prev, _apsp_backend = _apsp_backend, name
     return prev
+
+
+# Admissibility-prune backend for the enumerator's expansion rounds.  All
+# backends compute the identical boolean mask (exact comparisons), so this
+# is a platform/cost knob, never a results knob — see kernels.admission.
+ADMISSION_BACKENDS = env.ADMISSION_BACKENDS
+
+_admission_backend = env.read("REPRO_ADMISSION_BACKEND")
+
+
+def set_admission_backend(name: str) -> str:
+    """Select the expansion-round admissibility-prune backend; returns the
+    previous setting.
+
+    ``numpy`` (default) keeps the prune in the host enumerator's numpy
+    broadcast; ``ref`` routes it through the straight-line jnp oracle and
+    ``pallas`` through the fused kernel (``repro.kernels.admission``), which
+    avoids the (rows, prefix, candidates) boolean temporary by folding the
+    membership test into a per-tile loop.  Path sets are bit-identical in
+    every mode (INVARIANTS.md CT-build).
+    """
+    global _admission_backend
+    if name not in ADMISSION_BACKENDS:
+        raise ValueError(
+            f"unknown admission backend {name!r}: expected {ADMISSION_BACKENDS}"
+        )
+    prev, _admission_backend = _admission_backend, name
+    return prev
+
+
+def _admission_mask(
+    dist_rows: np.ndarray,
+    dst_row_b: np.ndarray,
+    cand: np.ndarray,
+    rem: np.ndarray,
+    pref: np.ndarray | None,
+) -> np.ndarray:
+    """(M, C) admissibility (+ simplicity when ``pref`` given) mask.
+
+    The hot allocation of an expansion level: the numpy form materializes an
+    (M, W, C) boolean broadcast for the membership test, the kernel backends
+    stream it per tile.  Exact comparisons -> identical masks everywhere.
+    """
+    if _admission_backend != "numpy":
+        from ..kernels.admission import admission_prune
+
+        return np.asarray(
+            admission_prune(
+                dist_rows, dst_row_b, cand, rem, pref=pref,
+                backend=_admission_backend,
+            )
+        )
+    ok = dist_rows[dst_row_b[:, None], cand] <= rem[:, None]
+    if pref is not None:
+        # simplicity: candidate must not already be on the prefix
+        ok &= ~(pref[:, :, None] == cand[:, None, :]).any(axis=1)
+    return ok
 
 
 def _diameter_hint(top: Topology) -> int | None:
@@ -435,6 +499,12 @@ def _batched_round(
     exact whenever ``budget <= base + 1``: a prefix that repeats a vertex has
     a cycle of >= 2 hops, so any completion through it is >= dist(s, t) + 2
     long and the admissibility prune already rejects it.
+
+    The cross-instance batch builder reuses this round UNCHANGED: its
+    shards arrive fully block-local (``_BlockDist.shard_ctx`` hands over
+    the group's own neighbor table, tile, and local pair ids), so the
+    composed enumeration is — by construction, not by argument — the same
+    computation the sequential driver runs per instance.
     """
     Q = len(src)
     out: list[list[list[int]]] = [[] for _ in range(Q)]
@@ -463,10 +533,10 @@ def _batched_round(
         # index [dst_row, cand] for row-contiguous reads; the sentinel
         # candidate gathers the tile's +inf column and prunes itself.
         rem = (budget[pid] - plen).astype(np.float32)
-        ok = dist_rows[dst_row[pid][:, None], cand] <= rem[:, None]
-        if check_simple:
-            # simplicity: candidate must not already be on the prefix
-            ok &= ~(pref[:, :, None] == cand[:, None, :]).any(axis=1)
+        ok = _admission_mask(
+            dist_rows, dst_row[pid], cand, rem,
+            pref if check_simple else None,
+        )
         r, c = np.nonzero(ok)
         if r.size == 0:
             break
@@ -562,7 +632,11 @@ def _subset_slack_block(
 
 
 def _shard_by_dst(
-    sel: np.ndarray, dst: np.ndarray, rows_cap: int, pairs_cap: int
+    sel: np.ndarray,
+    dst: np.ndarray,
+    rows_cap: int,
+    pairs_cap: int,
+    blocks: np.ndarray | None = None,
 ) -> list:
     """Split ``sel`` into dst-sorted shards of <= ``rows_cap`` distinct dsts
     AND <= ``pairs_cap`` pairs.
@@ -574,6 +648,13 @@ def _shard_by_dst(
     candidate/prefix temporaries scale with the number of pairs expanding
     together, and at 10k-switch scale an uncapped shard would hold every
     commodity at once.
+
+    ``blocks`` (the cross-instance batch builder's group bases) additionally
+    splits at topology-block boundaries, so every shard's destinations live
+    in ONE block and its tile can be block-compact (group width, not the
+    composed width).  Since global ids sort block-contiguously this only
+    inserts cut points, never reorders — per-pair results are shard-layout
+    independent either way (CT-build).
     """
     if not len(sel):
         return []
@@ -583,9 +664,11 @@ def _shard_by_dst(
     distinct = np.cumsum(np.r_[True, d[1:] != d[:-1]]) - 1
     row_grp = distinct // rows_cap
     pair_grp = np.arange(len(s)) // pairs_cap
-    change = np.r_[
-        True, (row_grp[1:] != row_grp[:-1]) | (pair_grp[1:] != pair_grp[:-1])
-    ]
+    tail = (row_grp[1:] != row_grp[:-1]) | (pair_grp[1:] != pair_grp[:-1])
+    if blocks is not None and len(blocks) > 1:
+        blk = np.searchsorted(blocks, d, side="right")
+        tail = tail | (blk[1:] != blk[:-1])
+    change = np.r_[True, tail]
     bounds = np.flatnonzero(change)
     return [s[b:e] for b, e in zip(bounds, np.r_[bounds[1:], len(s)])]
 
@@ -599,9 +682,81 @@ def _dist_tile(dist: np.ndarray, rows: np.ndarray) -> np.ndarray:
     return tile
 
 
+class _BlockDist:
+    """Block-diagonal distance view over G disjoint topology groups.
+
+    The cross-instance batch builder places each distinct topology's node ids
+    in its own contiguous block (group g occupies ``[bases[g], bases[g] +
+    n_g)`` of the combined id space) and runs one dst-sharded enumeration
+    over every group's pairs.  This view supplies what the enumerator needs
+    — per-pair base hops over the composed id space, and per-shard
+    expansion state — without ever materializing an (N_total)^2 matrix or
+    an N_total-wide neighbor table.
+
+    Shards are **block-local**: ``_shard_by_dst`` cuts at block boundaries,
+    so every shard's pairs live in ONE group and ``shard_ctx`` hands
+    ``_batched_round`` that group's own neighbor table, a group-width f32
+    distance tile (exactly what ``_dist_tile`` would build for the
+    standalone instance), and the pairs' LOCAL ids.  Each shard round is
+    therefore literally the sequential driver's computation — identical
+    arrays in, identical canonical tie order out — which is why the
+    composed build is bit-identical to B sequential builds (CT-build) with
+    zero per-level translation cost, and why results arrive already in
+    instance-local ids.
+    """
+
+    def __init__(self, dists: list, nbrs: list, bases: np.ndarray):
+        self.dists = dists  # per-group canonical int16 (or float) matrices
+        self.nbrs = nbrs  # per-group padded local neighbor tables
+        self.bases = np.asarray(bases, dtype=np.int64)  # (G,) block offsets
+        self.n = (
+            int(self.bases[-1]) + int(dists[-1].shape[0]) if dists else 0
+        )
+        # shard tiles are group-wide, not composed-wide, so the row budget
+        # follows the widest group
+        self.n_tile = max((d.shape[0] for d in dists), default=0)
+
+    def _group_of(self, ids: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.bases, ids, side="right") - 1
+
+    def pair_hops(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """f32 hop distances for global-id pairs (+inf across blocks)."""
+        out = np.full(len(src), np.inf, dtype=np.float32)
+        g = self._group_of(src)
+        same = g == self._group_of(dst)
+        for gi in np.unique(g[same]):
+            m = same & (g == gi)
+            b = int(self.bases[gi])
+            out[m] = hops_to_f32(self.dists[gi][src[m] - b, dst[m] - b])
+        return out
+
+    def shard_ctx(
+        self, rows: np.ndarray, src: np.ndarray, dst: np.ndarray
+    ) -> tuple:
+        """Block-local expansion state for one shard: ``(nbr, tile, src,
+        dst)`` with every array in the shard's OWN group's local id space.
+
+        ``rows``/``src``/``dst`` are global ids that must live in one group
+        (``_shard_by_dst`` with ``blocks`` guarantees it).  The tile is the
+        group-width gather ``_dist_tile`` would produce for the standalone
+        instance — trailing +inf sentinel column included — and the group's
+        padded neighbor table uses the matching local sentinel, so the
+        receiving ``_batched_round`` is indistinguishable from a sequential
+        per-instance call.
+        """
+        g = int(self._group_of(rows[:1])[0])
+        b = int(self.bases[g])
+        d = self.dists[g]
+        n_g = d.shape[0]
+        tile = np.empty((len(rows), n_g + 1), dtype=np.float32)
+        tile[:, :n_g] = hops_to_f32(d[rows - b])
+        tile[:, n_g] = np.inf
+        return self.nbrs[g], tile, src - b, dst - b
+
+
 def _k_shortest_unique(
-    nbr: np.ndarray,
-    dist: np.ndarray,
+    nbr: np.ndarray | None,
+    dist: "np.ndarray | _BlockDist",
     src: np.ndarray,
     dst: np.ndarray,
     k: int,
@@ -629,14 +784,34 @@ def _k_shortest_unique(
     canonical form and no (N+1)^2 float copy ever exists.  Shards partition
     the pair set, and per-pair results are independent of sharding, so the
     returned path sets are identical to the unsharded enumeration.
+
+    ``dist`` may also be a ``_BlockDist`` view — the cross-instance batch
+    builder's block-diagonal composition (``nbr`` is then unused; each
+    shard gets its group's own table from ``shard_ctx``).  Global dst ids
+    sort group-contiguously, so the same dst-sharding doubles as
+    (instance-group, pair) sharding — with cuts at block boundaries so
+    every shard is block-local — and both caps keep their
+    ``REPRO_ROUTE_TILE_BYTES`` derivation with ``n`` the widest group's
+    node count (the actual tile width), not the composed total.
     """
     Q = len(src)
     results: list[list[list[int]]] = [[] for _ in range(Q)]
-    base = hops_to_f32(dist[src, dst])
+    if isinstance(dist, _BlockDist):
+        base = dist.pair_hops(src, dst)
+        n = dist.n_tile  # tiles (and their row budget) are group-wide
+        ctx_of = dist.shard_ctx
+        blocks = dist.bases
+    else:
+        base = hops_to_f32(dist[src, dst])
+        n = dist.shape[0]
+        blocks = None
+
+        def ctx_of(rows: np.ndarray, s: np.ndarray, d: np.ndarray) -> tuple:
+            return nbr, _dist_tile(dist, rows), s, d
+
     active = np.flatnonzero(np.isfinite(base))
     if len(active) == 0:
         return results
-    n = dist.shape[0]
     rows_cap = max(1, _FRONTIER_TILE_BYTES // (4 * (n + 1)))
     # frontier temporaries measure ~65 KiB per expanding pair on the paper's
     # degree-36 graphs (diameter 4); budget each shard against that rate so
@@ -670,12 +845,12 @@ def _k_shortest_unique(
             lo = slack[active] <= 1
             buckets = [(True, active[lo]), (False, active[~lo])]
         for lo_slack, sel in buckets:
-            for sh in _shard_by_dst(sel, dst, rows_cap, pairs_cap):
+            for sh in _shard_by_dst(sel, dst, rows_cap, pairs_cap, blocks):
                 rows = np.unique(dst[sh])  # sorted — searchsorted below
-                tile = _dist_tile(dist, rows)
+                nbr_sh, tile, src_sh, dst_sh = ctx_of(rows, src[sh], dst[sh])
                 dst_row = np.searchsorted(rows, dst[sh])
                 found = _batched_round(
-                    nbr, tile, src[sh], dst[sh], dst_row,
+                    nbr_sh, tile, src_sh, dst_sh, dst_row,
                     base[sh] + slack[sh], k, max_enum,
                     check_simple=not lo_slack,
                 )
@@ -866,28 +1041,69 @@ class PathSystem:
         return load[: self.n_slots]
 
 
+def _slot_chunk_fill(
+    flat: list[list[int]],
+    lens: np.ndarray,
+    lmax_nodes: int,
+    n: int,
+    E: int,
+    sorted_keys: np.ndarray,
+    order: np.ndarray,
+    pe_out: np.ndarray,
+    len_out: np.ndarray,
+) -> None:
+    """Slot-convert one row chunk of the flat path list into output views.
+
+    Writes the chunk's padded slot rows into ``pe_out`` (prefilled with the
+    ``2E`` sentinel) and hop counts into ``len_out``.  Chunk boundaries sit
+    at path-row granularity and every row's conversion depends only on its
+    own node sequence, so chunked assembly is byte-identical to one-shot.
+    """
+    from itertools import chain
+
+    Pc = len(flat)
+    if not Pc:
+        return
+    nodes = np.full((Pc, lmax_nodes), -1, dtype=np.int64)
+    vals = np.fromiter(
+        chain.from_iterable(flat), dtype=np.int64, count=int(lens.sum())
+    )
+    rows = np.repeat(np.arange(Pc), lens)
+    cols = np.arange(len(vals)) - np.repeat(np.cumsum(lens) - lens, lens)
+    nodes[rows, cols] = vals
+    a, b = nodes[:, :-1], nodes[:, 1:]
+    hop = b >= 0
+    lo = np.minimum(a, b)
+    hi = np.maximum(a, b)
+    qkey = np.where(hop, lo * n + hi, 0)
+    eid = order[np.searchsorted(sorted_keys, qkey)]
+    slots = np.where(a < b, eid, eid + E)
+    if lmax_nodes > 1:
+        pe_out[:, : lmax_nodes - 1] = np.where(hop, slots, 2 * E)
+    len_out[:] = hop.sum(axis=1)
+
+
 def _paths_to_slots(
     top: Topology,
     entry: dict,
     all_paths: list[list[list[int]]],
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Vectorized conversion of node sequences to the padded slot matrix."""
-    from itertools import chain
+    """Streamed conversion of node sequences to the padded slot matrix.
 
+    The output (P, Lmax) slot matrix is allocated once; the node-matrix and
+    slot-conversion temporaries are built per bounded row chunk
+    (``_slot_chunk_fill``), so assembly working memory is one chunk's —
+    budgeted against ``REPRO_ROUTE_TILE_BYTES`` like the enumerator's tiles
+    — instead of ~6 path-table-sized intermediates at once.  The batch
+    builder leans on this: B instances' conversions stream through the same
+    bounded scratch.
+    """
     E = top.n_edges
     n = top.n_switches
     flat = [p for paths in all_paths for p in paths]
     P = len(flat)
     lens = np.fromiter(map(len, flat), dtype=np.int64, count=P)
     lmax_nodes = int(lens.max()) if P else 2
-    nodes = np.full((P, lmax_nodes), -1, dtype=np.int64)
-    if P:
-        vals = np.fromiter(
-            chain.from_iterable(flat), dtype=np.int64, count=int(lens.sum())
-        )
-        rows = np.repeat(np.arange(P), lens)
-        cols = np.arange(len(vals)) - np.repeat(np.cumsum(lens) - lens, lens)
-        nodes[rows, cols] = vals
     per_comm = np.fromiter(map(len, all_paths), dtype=np.int64, count=len(all_paths))
     nonempty = per_comm > 0
     kept = np.int32(nonempty.sum())
@@ -895,18 +1111,17 @@ def _paths_to_slots(
         np.arange(int(kept), dtype=np.int32), per_comm[nonempty]
     )
 
-    a, b = nodes[:, :-1], nodes[:, 1:]
-    hop = b >= 0
-    lo = np.minimum(a, b)
-    hi = np.maximum(a, b)
+    pe = np.full((P, max(lmax_nodes - 1, 1)), 2 * E, dtype=np.int32)
+    path_len = np.zeros(P, dtype=np.int32)
     sorted_keys, order = _cached_slot_lookup(top, entry)
-    qkey = np.where(hop, lo * n + hi, 0)
-    eid = order[np.searchsorted(sorted_keys, qkey)]
-    slots = np.where(a < b, eid, eid + E)
-    pe = np.where(hop, slots, 2 * E).astype(np.int32)
-    path_len = hop.sum(axis=1).astype(np.int32)
-    if pe.shape[1] == 0:  # every path degenerate (src == dst); keep 1 column
-        pe = np.full((P, 1), 2 * E, dtype=np.int32)
+    # ~6 (rows, lmax) int64/bool temporaries live during a chunk conversion
+    rows_budget = max(1024, _FRONTIER_TILE_BYTES // max(48 * lmax_nodes, 1))
+    for lo in range(0, P, rows_budget):
+        hi = min(lo + rows_budget, P)
+        _slot_chunk_fill(
+            flat[lo:hi], lens[lo:hi], lmax_nodes, n, E,
+            sorted_keys, order, pe[lo:hi], path_len[lo:hi],
+        )
     return pe, path_len, owner, np.int32(kept)
 
 
@@ -953,6 +1168,216 @@ def build_path_system(
     if checks_enabled():
         check_path_system(ps, top, name="build_path_system")
     return ps
+
+
+def _group_slack_init(
+    top: Topology,
+    entry: dict,
+    dist: np.ndarray,
+    src_u: np.ndarray,
+    dst_u: np.ndarray,
+    k: int,
+    max_slack: int,
+) -> np.ndarray:
+    """Per-unique-pair slack budgets for one topology group.
+
+    Mirrors ``k_shortest_paths``' ``use_counts=True`` gating exactly — the
+    cached walk-count table while it fits ``_WALK_TABLE_BYTES``, batched
+    row powers (``_subset_slack``) beyond — and replicates the counts ->
+    slack decision rule of ``_k_shortest_unique`` verbatim, so the batch
+    builder hands the combined enumeration the same per-pair budgets the
+    sequential builds would compute.  Budgets are purely a cost knob
+    (path sets are budget-invariant past the minimum), but matching them
+    keeps the two drivers' work — and wall-clock rows — comparable.
+    """
+    q = len(src_u)
+    slack = np.zeros(q, dtype=np.int64)
+    if max_slack < 1 or k <= 1 or not q:
+        return slack
+    n = top.n_switches
+    lmax = max(_finite_dist_max(dist) + 1, 1)
+    if lmax * n * n * 4 > _WALK_TABLE_BYTES:
+        return _subset_slack(_slack_adj(top, entry), dist, src_u, dst_u, k)
+    counts = _cached_walk_counts(top, entry, dist)
+    base = hops_to_f32(dist[src_u, dst_u])
+    active = np.flatnonzero(np.isfinite(base))
+    if not len(active):
+        return slack
+    d = base[active].astype(np.int64)
+    pos = d >= 1  # src == dst pairs keep slack 0
+    ai, di = active[pos], d[pos]
+    w_d = counts[di - 1, src_u[ai], dst_u[ai]]
+    w_d1 = counts[np.minimum(di, len(counts) - 1), src_u[ai], dst_u[ai]]
+    w_d1 = np.where(di < len(counts), w_d1, 0.0)
+    slack[ai] = np.where(w_d >= k, 0, np.where(w_d + w_d1 >= k, 1, 2))
+    return slack
+
+
+def build_path_system_batch(
+    tops: "list[Topology]",
+    comms: "list[Commodities]",
+    k: int = 8,
+    max_slack: int = 4,
+    max_enum: int = 4096,
+    keep_node_paths: bool = False,
+    cache: bool = True,
+    bucket: bool = True,
+):
+    """Build B instances' routing tables as ONE cross-instance enumeration.
+
+    Pipeline (the batch rung of the construction stack)::
+
+        group by topology fingerprint     (identical topologies share a block)
+          |  per group: APSP + neighbor table + slack budgets  (cached state)
+          v
+        block-diagonal composition        (group g's ids offset by bases[g])
+          |  ONE level-synchronous frontier pass over every group's pairs,
+          |  dst-sharded -> (instance-group, pair) shards, caps from
+          |  REPRO_ROUTE_TILE_BYTES (block-compact tiles, no composed matrix)
+          v
+        per-instance distribution         (local ids; reverse src>dst)
+          |  streamed _paths_to_slots per instance (bounded row chunks)
+          v
+        PathSystemBatch.from_systems      (common envelope, gather tables)
+
+    Returns a ``core.flow.PathSystemBatch`` whose ``systems[i]`` is
+    **byte-identical** to ``build_path_system(tops[i], comms[i], ...)``:
+    per-pair enumeration never leaves its block (the composed neighbor
+    table is block-diagonal and cross-block distances are +inf), the
+    canonical (length, lex) tie order is invariant under the uniform
+    per-block id offset, and the frontier cap binds per pair — so sharding
+    instances together changes where the work happens, never its result
+    (INVARIANTS.md CT-build; asserted by ``tests/test_build_pipeline.py``
+    and the ``build_batch_*`` bench rows).
+
+    The win is amortization: every expansion level's fixed numpy overhead
+    is paid once for the whole batch instead of once per instance, and
+    duplicate (topology, pair) work dedups across instances — a sweep's
+    probe matrices over one topology collapse to the union of their pairs.
+    """
+    from .flow import PathSystemBatch  # local: flow imports PathSystem et al
+
+    tops = list(tops)
+    comms = list(comms)
+    if len(tops) != len(comms):
+        raise ValueError(
+            f"build_path_system_batch needs one Commodities per topology: "
+            f"got {len(tops)} topologies, {len(comms)} commodity sets"
+        )
+    if not tops:
+        raise ValueError("build_path_system_batch needs at least one instance")
+
+    B = len(tops)
+    entries = [_topo_entry(t, cache=cache) for t in tops]
+
+    # ---- group instances by edge-set fingerprint ------------------------- #
+    gid_of: dict[tuple, int] = {}
+    group_rep: list[int] = []  # representative instance index per group
+    inst_group = np.empty(B, dtype=np.int64)
+    for i, t in enumerate(tops):
+        key = _topo_key(t)
+        g = gid_of.get(key)
+        if g is None:
+            g = len(group_rep)
+            gid_of[key] = g
+            group_rep.append(i)
+        inst_group[i] = g
+    G = len(group_rep)
+    members: list[list[int]] = [[] for _ in range(G)]
+    for i in range(B):
+        members[int(inst_group[i])].append(i)
+
+    # ---- per-instance canonical pair keys, per-group unique pair sets ---- #
+    inst_keys: list[np.ndarray] = []
+    for i in range(B):
+        n_g = tops[i].n_switches
+        s = np.asarray(comms[i].src, dtype=np.int64)
+        d = np.asarray(comms[i].dst, dtype=np.int64)
+        inst_keys.append(np.minimum(s, d) * n_g + np.maximum(s, d))
+    group_keys = [
+        np.unique(np.concatenate([inst_keys[i] for i in members[g]]))
+        for g in range(G)
+    ]
+
+    # ---- block-diagonal composition -------------------------------------- #
+    sizes = np.array([tops[group_rep[g]].n_switches for g in range(G)],
+                     dtype=np.int64)
+    bases = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    group_dist = []
+    group_nbr = []
+    for g in range(G):
+        rep = group_rep[g]
+        group_dist.append(_cached_dist(tops[rep], entries[rep]))
+        group_nbr.append(_cached_nbr(tops[rep], entries[rep]))
+
+    offs = np.concatenate(
+        [[0], np.cumsum([len(gk) for gk in group_keys])]
+    ).astype(np.int64)
+    src_all = np.empty(int(offs[-1]), dtype=np.int64)
+    dst_all = np.empty(int(offs[-1]), dtype=np.int64)
+    slack_all = np.empty(int(offs[-1]), dtype=np.int64)
+    for g in range(G):
+        gk = group_keys[g]
+        n_g = int(sizes[g])
+        b = int(bases[g])
+        rep = group_rep[g]
+        s_u, d_u = gk // n_g, gk % n_g
+        sl = slice(int(offs[g]), int(offs[g + 1]))
+        src_all[sl] = s_u + b
+        dst_all[sl] = d_u + b
+        slack_all[sl] = _group_slack_init(
+            tops[rep], entries[rep], group_dist[g], s_u, d_u, k, max_slack
+        )
+
+    # ---- ONE combined enumeration over every group's pairs --------------- #
+    uniq = _k_shortest_unique(
+        None, _BlockDist(group_dist, group_nbr, bases), src_all, dst_all,
+        k, max_slack, max_enum, slack_init=slack_all,
+    )
+
+    # ---- distribute per instance, stream slot assembly ------------------- #
+    systems = []
+    for i in range(B):
+        g = int(inst_group[i])
+        inv = np.searchsorted(group_keys[g], inst_keys[i]) + int(offs[g])
+        s_i = np.asarray(comms[i].src, dtype=np.int64)
+        d_i = np.asarray(comms[i].dst, dtype=np.int64)
+        # enumeration already collected LOCAL ids (block-compact shards),
+        # so distribution is copy + src>dst reversal, like the sequential
+        # driver — no per-element offset arithmetic here
+        rev = (s_i > d_i).tolist()
+        all_paths: list[list[list[int]]] = []
+        for j, q in enumerate(inv.tolist()):
+            found = uniq[q]
+            if rev[j]:
+                paths = [p[::-1] for p in found]
+            else:
+                # copy so duplicate pairs never alias
+                paths = [list(p) for p in found]
+            all_paths.append(paths)
+        unrouted = np.array([len(p) == 0 for p in all_paths], dtype=bool)
+        E = tops[i].n_edges
+        pe, path_len, owner, kept = _paths_to_slots(tops[i], entries[i],
+                                                    all_paths)
+        systems.append(PathSystem(
+            n_edges=E,
+            path_edges=pe,
+            path_len=path_len,
+            path_owner=owner,
+            demands=comms[i].demand[~unrouted].astype(np.float32),
+            capacities=np.ones(2 * E, dtype=np.float32),
+            n_commodities=int(kept),
+            node_paths=all_paths if keep_node_paths else None,
+            unrouted=unrouted,
+            src=s_i.copy(),
+            dst=d_i.copy(),
+            k=k,
+            max_slack=max_slack,
+        ))
+    batch = PathSystemBatch.from_systems(systems, bucket=bucket)
+    if checks_enabled():
+        check_built_batch(batch, tops, name="build_path_system_batch")
+    return batch
 
 
 def ecmp_path_system(

@@ -23,6 +23,7 @@ import os
 from typing import Any, Callable
 
 __all__ = [
+    "ADMISSION_BACKENDS",
     "APSP_BACKENDS",
     "EnvSpec",
     "SPECS",
@@ -35,6 +36,13 @@ __all__ = [
 #: ``REPRO_APSP_BACKEND`` without importing the routing module;
 #: ``repro.core.routing`` re-exports this tuple).
 APSP_BACKENDS = ("auto", "dense", "blocked", "minplus", "minplus_blocked")
+
+#: Admissibility-prune backends for the path enumerator's expansion rounds
+#: (owned here for the same reason as ``APSP_BACKENDS``; re-exported by
+#: ``repro.core.routing``).  All three compute the identical boolean mask —
+#: the comparisons are exact in every backend — so the knob is purely a
+#: platform/cost choice, never a results choice.
+ADMISSION_BACKENDS = ("numpy", "ref", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +125,20 @@ SPECS: dict[str, EnvSpec] = {
                        hint=" (float32 tile budget in bytes, 1 MiB..1 TiB)"),
             256 << 20,
             "Float32 working-tile budget for the sharded path enumerator.",
+        ),
+        EnvSpec(
+            "REPRO_ADMISSION_BACKEND",
+            _parse_choice(ADMISSION_BACKENDS),
+            "numpy",
+            "Admissibility-prune backend for the path enumerator "
+            "(see repro.core.routing.set_admission_backend).",
+        ),
+        EnvSpec(
+            "REPRO_BUILD_PIPELINE",
+            _parse_flag,
+            True,
+            "Route sweep drivers through the pipelined/batched path-system "
+            "builder (0 falls back to sequential per-instance builds).",
         ),
         EnvSpec(
             "REPRO_LP_PATH_LIMIT",

@@ -7,6 +7,9 @@
   fused tile pass per batch member — the TPU inner loop of
   ``core.flow.mw_concurrent_flow_batch`` (on CPU the batch solver instead
   uses its precomputed gather fan-in tables; see ``core.flow``).
+- ``admission``  — fused admissibility + simplicity prune for the path
+  enumerator's expansion levels (``REPRO_ADMISSION_BACKEND`` selects it;
+  every backend returns the identical mask, see ``core.routing``).
 
 ``ops`` holds the jit'd dispatch wrappers (kernel on TPU, jnp oracle on CPU),
 ``ref`` the pure-jnp oracles used as ground truth in tests.
@@ -23,6 +26,7 @@ BFS in ``core.metrics``, same int16 contract).
 """
 
 from . import ops, ref
+from .admission import admission_prune
 from .congestion import congestion_pallas
 from .minplus import minplus_pallas
 from .power import matmul_pallas
@@ -33,4 +37,5 @@ __all__ = [
     "minplus_pallas",
     "matmul_pallas",
     "congestion_pallas",
+    "admission_prune",
 ]

@@ -130,8 +130,12 @@ def _path_min_gather(share_pad: jnp.ndarray, pe: jnp.ndarray) -> jnp.ndarray:
     """(B, P) min over each path's hop slots of a padded (B, S+1) table.
 
     Accumulated hop column by hop column (trace-time unroll over L) — one
-    flattened (B, P*L) take_along_axis is ~10x slower on XLA:CPU, which
-    only emits the vectorized gather for the narrow per-column form.
+    flattened (B, P*L) take_along_axis materializes the (B, P, L)
+    intermediate and runs several-fold slower on XLA:CPU, which only stays
+    on the vectorized row-gather path for the narrow per-column form.  Min
+    accumulates exactly in any order; the ordered-sum sibling
+    (``core.flow._path_cost_gather``) needs a positional halving tree over
+    the columns to keep the same association as ``_fold_sum``.
     """
     B = share_pad.shape[0]
     L = pe.shape[-1]

@@ -1,0 +1,299 @@
+"""Pipelined multi-instance path-system construction (build pipeline PR).
+
+Covers the three tentpole layers: cross-instance sharded enumeration
+(``build_path_system_batch`` bit-parity vs B sequential builds, shard-size
+invariance, ragged/duplicate/B=1 instance mixes), the host/device
+double-buffer (``stream_builds`` ordering and fallback semantics), and the
+streamed slot assembly + admission backends (numpy/ref/pallas mask parity).
+Plus the env knobs (``REPRO_ADMISSION_BACKEND`` / ``REPRO_BUILD_PIPELINE``)
+through ``repro.env``'s validated registry.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro import env
+from repro.core import (
+    build_path_system,
+    build_path_system_batch,
+    jellyfish,
+    pipeline_enabled,
+    random_permutation_traffic,
+    set_build_pipeline,
+    stream_builds,
+)
+from repro.core import routing
+from repro.core.routing import clear_routing_cache, set_admission_backend
+from repro.core.traffic import permutation_commodities, random_server_permutation
+
+
+def _mixed_instances():
+    """Ragged sizes, a duplicated topology, and distinct traffic per slot."""
+    specs = [(20, 6, 4, 0), (20, 6, 4, 0), (26, 7, 5, 1), (14, 5, 3, 2)]
+    tops, comms = [], []
+    for i, (n, k, r, s) in enumerate(specs):
+        top = jellyfish(n, k, r, seed=s)
+        tops.append(top)
+        comms.append(random_permutation_traffic(top, seed=100 + i))
+    return tops, comms
+
+
+def _assert_ps_equal(a, b, ctx=""):
+    for f in ("path_edges", "path_len", "path_owner", "demands",
+              "src", "dst", "unrouted"):
+        assert np.array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        ), f"{ctx}: {f} differs"
+    assert a.n_edges == b.n_edges and a.n_commodities == b.n_commodities, ctx
+    # fresh builds carry no warm-start lineage in either driver
+    assert (a.row_map is None) == (b.row_map is None), ctx
+
+
+# --------------------------------------------------------------------------- #
+# bit-parity: batch == B sequential builds
+# --------------------------------------------------------------------------- #
+
+
+def test_batch_build_bit_parity():
+    tops, comms = _mixed_instances()
+    seq = [build_path_system(t, c, k=4, max_slack=2)
+           for t, c in zip(tops, comms)]
+    clear_routing_cache()
+    batch = build_path_system_batch(tops, comms, k=4, max_slack=2)
+    assert len(batch.systems) == len(seq)
+    for i, (a, b) in enumerate(zip(seq, batch.systems)):
+        _assert_ps_equal(a, b, f"instance {i}")
+
+
+def test_batch_build_b1_degenerate():
+    top = jellyfish(18, 6, 4, seed=7)
+    comm = random_permutation_traffic(top, seed=3)
+    a = build_path_system(top, comm, k=4, max_slack=2)
+    b = build_path_system_batch([top], [comm], k=4, max_slack=2).systems[0]
+    _assert_ps_equal(a, b, "B=1")
+
+
+def test_batch_build_reversed_pairs_and_self_pairs():
+    # src > dst commodities store the reversed canonical enumeration and
+    # src == dst self-pairs keep a zero-length row; both must survive the
+    # cross-instance composition
+    top = jellyfish(16, 6, 4, seed=4)
+    n_srv = int(top.servers_per_switch.sum())
+    perm = random_server_permutation(n_srv, seed=11)
+    comm = permutation_commodities(top, perm)
+    assert np.any(np.asarray(comm.src) > np.asarray(comm.dst))
+    a = build_path_system(top, comm, k=4, max_slack=2)
+    b = build_path_system_batch([top, top], [comm, comm],
+                                k=4, max_slack=2).systems[1]
+    _assert_ps_equal(a, b, "reversed pairs")
+
+
+def test_batch_build_shard_size_invariance(monkeypatch):
+    # a tiny tile budget forces many (instance, pair) shards; path sets,
+    # slot tables and row order must not move (CT-build shard-order
+    # independence)
+    tops, comms = _mixed_instances()
+    base = build_path_system_batch(tops, comms, k=4, max_slack=2, cache=False)
+    monkeypatch.setattr(routing, "_FRONTIER_TILE_BYTES", 1 << 20)
+    clear_routing_cache()
+    small = build_path_system_batch(tops, comms, k=4, max_slack=2, cache=False)
+    for i, (a, b) in enumerate(zip(base.systems, small.systems)):
+        _assert_ps_equal(a, b, f"tile-budget instance {i}")
+
+
+def test_batch_build_envelope_matches_from_systems():
+    # the batch must BE a from_systems batch over the same systems —
+    # identical envelope, padding, and gather tables
+    from repro.core.flow import PathSystemBatch
+
+    tops, comms = _mixed_instances()
+    batch = build_path_system_batch(tops, comms, k=4, max_slack=2)
+    rebuilt = PathSystemBatch.from_systems(list(batch.systems))
+    assert np.array_equal(np.asarray(batch.path_edges),
+                          np.asarray(rebuilt.path_edges))
+    assert np.array_equal(np.asarray(batch.path_owner),
+                          np.asarray(rebuilt.path_owner))
+    assert np.array_equal(np.asarray(batch.demands),
+                          np.asarray(rebuilt.demands))
+    assert np.array_equal(np.asarray(batch.n_paths),
+                          np.asarray(rebuilt.n_paths))
+
+
+def test_batch_build_rejects_mismatched_lengths():
+    tops, comms = _mixed_instances()
+    with pytest.raises(ValueError):
+        build_path_system_batch(tops, comms[:-1], k=4)
+    with pytest.raises(ValueError):
+        build_path_system_batch([], [], k=4)
+
+
+# --------------------------------------------------------------------------- #
+# admission backends
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_admission_backend_parity(backend):
+    top = jellyfish(24, 7, 5, seed=5)
+    comm = random_permutation_traffic(top, seed=9)
+    base = build_path_system(top, comm, k=4, max_slack=2, cache=False)
+    prev = set_admission_backend(backend)
+    try:
+        ps = build_path_system(top, comm, k=4, max_slack=2, cache=False)
+    finally:
+        set_admission_backend(prev)
+    _assert_ps_equal(base, ps, backend)
+
+
+def test_admission_mask_kernel_matches_ref():
+    from repro.kernels.admission import admission_pallas, admission_ref
+
+    rng = np.random.default_rng(0)
+    m, c, w = 37, 11, 5
+    dvals = rng.integers(0, 6, (m, c)).astype(np.float32)
+    dvals[rng.random((m, c)) < 0.1] = np.inf
+    rem = rng.integers(0, 6, m).astype(np.float32)
+    cand = rng.integers(0, 40, (m, c)).astype(np.int32)
+    pref = rng.integers(-1, 40, (m, w)).astype(np.int32)
+    ref = np.asarray(admission_ref(dvals, rem, cand, pref))
+    ker = np.asarray(admission_pallas(dvals, rem, cand, pref,
+                                      bm=16, bc=16, interpret=True))
+    assert np.array_equal(ref, ker)
+
+
+def test_admission_dtype_validation():
+    from repro.kernels.admission import check_admission_dtype
+
+    with pytest.raises(ValueError):
+        check_admission_dtype(np.zeros((2, 2), np.int32))
+    (out,) = check_admission_dtype(np.zeros((2, 2), np.float16))
+    assert out.dtype == np.float32
+
+
+def test_set_admission_backend_rejects_unknown():
+    with pytest.raises(ValueError):
+        set_admission_backend("simd")
+
+
+# --------------------------------------------------------------------------- #
+# stream_builds double-buffer
+# --------------------------------------------------------------------------- #
+
+
+def test_stream_builds_order_and_results():
+    log = []
+
+    def thunk_of(i):
+        def thunk():
+            log.append(i)
+            return i * i
+        return thunk
+
+    assert list(stream_builds([thunk_of(i) for i in range(5)])) == [
+        0, 1, 4, 9, 16
+    ]
+    assert log == [0, 1, 2, 3, 4]  # single worker, submission order
+
+
+def test_stream_builds_prefetches_one_ahead():
+    # while the consumer holds result i, build i+1 must already be running
+    # (or done) on the worker: with 2 thunks, thunk 1 starts before the
+    # consumer advances past result 0
+    started = threading.Event()
+    release = threading.Event()
+
+    def first():
+        return 0
+
+    def second():
+        started.set()
+        release.wait(timeout=10)
+        return 1
+
+    it = stream_builds([first, second])
+    assert next(it) == 0
+    assert started.wait(timeout=10), "build 1 did not overlap consumption"
+    release.set()
+    assert next(it) == 1
+
+
+def test_stream_builds_disabled_runs_inline():
+    tid = []
+
+    def thunk():
+        tid.append(threading.get_ident())
+        return 42
+
+    assert list(stream_builds([thunk], enabled=False)) == [42]
+    assert tid == [threading.get_ident()]
+
+
+def test_stream_builds_propagates_errors_in_position():
+    def ok():
+        return 1
+
+    def boom():
+        raise RuntimeError("build failed")
+
+    it = stream_builds([ok, boom])
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="build failed"):
+        next(it)
+
+
+def test_set_build_pipeline_round_trip():
+    prev = set_build_pipeline(False)
+    try:
+        assert pipeline_enabled() is False
+        assert pipeline_enabled(True) is True  # explicit arg wins
+        set_build_pipeline(True)
+        assert pipeline_enabled() is True
+        assert pipeline_enabled(False) is False
+    finally:
+        set_build_pipeline(prev)
+
+
+# --------------------------------------------------------------------------- #
+# env knobs
+# --------------------------------------------------------------------------- #
+
+
+def test_env_admission_backend_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_ADMISSION_BACKEND", "pallas")
+    assert env.read("REPRO_ADMISSION_BACKEND") == "pallas"
+    monkeypatch.setenv("REPRO_ADMISSION_BACKEND", "gpu")
+    with pytest.raises(ValueError, match="REPRO_ADMISSION_BACKEND"):
+        env.read("REPRO_ADMISSION_BACKEND")
+
+
+def test_env_build_pipeline_validation(monkeypatch):
+    monkeypatch.delenv("REPRO_BUILD_PIPELINE", raising=False)
+    assert env.read("REPRO_BUILD_PIPELINE") is True
+    monkeypatch.setenv("REPRO_BUILD_PIPELINE", "0")
+    assert env.read("REPRO_BUILD_PIPELINE") is False
+    monkeypatch.setenv("REPRO_BUILD_PIPELINE", "yes")
+    with pytest.raises(ValueError, match="REPRO_BUILD_PIPELINE"):
+        env.read("REPRO_BUILD_PIPELINE")
+
+
+# --------------------------------------------------------------------------- #
+# contracts at the batch-builder boundary
+# --------------------------------------------------------------------------- #
+
+
+def test_check_built_batch_validates_and_rejects():
+    from repro.analysis.contracts import ContractViolation, check_built_batch
+
+    tops, comms = _mixed_instances()
+    batch = build_path_system_batch(tops, comms, k=4, max_slack=2)
+    check_built_batch(batch, tops)  # a fresh build must pass
+
+    bad = np.asarray(batch.path_edges).copy()
+    i = 0
+    pb = int(np.asarray(batch.n_paths)[i])
+    bad[i, pb:, :] = 0  # clobber the per-instance padding sentinel
+    broken = batch.__class__(**{**batch.__dict__, "path_edges": bad})
+    with pytest.raises(ContractViolation):
+        check_built_batch(broken, tops)

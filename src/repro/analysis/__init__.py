@@ -11,6 +11,10 @@ Three layers guard the invariants the solvers' bit-exactness claims rest on
 - :mod:`repro.analysis.retrace` — compile-count tracer asserting
   one-compile-per-shape-bucket (exposed lazily: it imports jax, the
   lint CLI must not).
+- :mod:`repro.analysis.registry` — the ``@solver_jit`` entry-point registry
+  retrace and the IR auditor enumerate (pure stdlib).
+- :mod:`repro.analysis.irlint` — jaxpr/HLO-level static auditor (rules
+  JF100-JF105), ``python -m repro.analysis ir``; lazy like retrace.
 """
 
 from __future__ import annotations
@@ -35,17 +39,21 @@ __all__ = [
     "check_path_system_batch",
     "check_sim_state",
     "checks_enabled",
+    "irlint",
     "lint_file",
     "lint_paths",
     "lint_source",
+    "registry",
     "retrace",
     "set_check_enabled",
 ]
 
 
 def __getattr__(name: str):
-    if name == "retrace":  # lazy: retrace imports jax; the lint CLI must not
+    # lazy: retrace/irlint import jax; the lint CLI must not.  registry is
+    # stdlib but joins them for symmetry of access.
+    if name in ("retrace", "irlint", "registry"):
         import importlib
 
-        return importlib.import_module("repro.analysis.retrace")
+        return importlib.import_module(f"repro.analysis.{name}")
     raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

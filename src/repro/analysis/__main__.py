@@ -2,6 +2,10 @@
 
 Exit status 0 when clean, 1 when any rule fires.  Pure stdlib (no jax), so
 CI's lint lane runs it without warming an accelerator runtime.
+
+``python -m repro.analysis ir [paths...]`` dispatches to the jaxpr/HLO-level
+auditor (:mod:`repro.analysis.irlint`, rules JF100-JF105) instead; only that
+sub-command imports jax.
 """
 
 from __future__ import annotations
@@ -12,6 +16,10 @@ from .linter import RULES, lint_paths
 
 
 def main(argv: list[str]) -> int:
+    if argv and argv[0] == "ir":
+        from .irlint import main_ir
+
+        return main_ir(argv[1:])
     paths = argv or ["src", "benchmarks"]
     violations = lint_paths(paths)
     for v in violations:

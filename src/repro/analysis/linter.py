@@ -35,20 +35,30 @@ JF006  ``jax.jit`` must not be created inside a function body in the
        ``@jax.jit`` / ``functools.partial(jax.jit, static_argnames=...)``
        is the sanctioned pattern.
 
-A finding can be suppressed per line with ``# repro-lint: disable=JF00X``.
-The linter is pure stdlib (``ast``) — ``python -m repro.analysis src
-benchmarks`` needs no jax and is CI's lint lane.
+A finding can be suppressed per line with ``# repro-lint: disable=JF00X``
+(comma-separate to suppress several rules).  Pragma rule ids are validated:
+an unknown or typo'd id is itself a violation (JF000) rather than a
+silently inert comment.  Valid ids are the AST rules below plus the IR
+rules JF100–JF105 (``repro.analysis.irlint``, suppressed the same way at
+their fixture sites).  The linter is pure stdlib (``ast``) — ``python -m
+repro.analysis src benchmarks`` needs no jax and is CI's lint lane.
 """
 
 from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import os
+import re
+import tokenize
+
+from .registry import IR_RULES
 
 __all__ = ["RULES", "Violation", "lint_file", "lint_paths", "lint_source"]
 
 RULES = {
+    "JF000": "repro-lint pragmas must name known rule ids",
     "JF001": "no hash()/set-iteration in routing/sim code paths",
     "JF002": 'np.argsort must pass kind="stable" in ordering modules',
     "JF003": "REPRO_* env reads must go through repro.env",
@@ -56,6 +66,13 @@ RULES = {
     "JF005": "solver reductions over padded axes must use _fold_sum",
     "JF006": "no jax.jit created inside a function body in solver modules",
 }
+
+#: Ids a repro-lint disable pragma may legitimately name: every AST rule
+#: plus the IR-audit rules (the auditor's fixture tests suppress
+#: deliberately-broken sources with the same pragma syntax).
+KNOWN_RULE_IDS = frozenset(RULES) | frozenset(IR_RULES)
+
+_PRAGMA_RE = re.compile(r"repro-lint:\s*disable=(\S+)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -362,6 +379,45 @@ def _check_jf006(tree: ast.AST, path: str, out: list[Violation]) -> None:
 
 
 # --------------------------------------------------------------------------- #
+# pragma parsing (JF000)
+# --------------------------------------------------------------------------- #
+
+
+def _pragma_ids(line: str) -> list[str]:
+    """Rule ids a ``repro-lint: disable=...`` pragma on ``line`` names.
+
+    The id list is the comma-separated token after ``disable=`` (prose
+    after whitespace is ignored, so ``disable=JF005  pad is exact`` still
+    suppresses JF005).  Empty when the line carries no pragma.
+    """
+    m = _PRAGMA_RE.search(line)
+    if m is None:
+        return []
+    return [s for s in m.group(1).split(",") if s]
+
+
+def _check_jf000(source: str, path: str, out: list[Violation]) -> None:
+    """A pragma naming an unknown rule id is inert by construction — the
+    typo'd suppression the author relied on never happens.  Flag it.
+
+    Only actual COMMENT tokens are validated (via ``tokenize``): docstrings
+    that *describe* the pragma syntax are prose, not suppressions, and must
+    not need to dodge their own linter.
+    """
+    for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+        if tok.type != tokenize.COMMENT:
+            continue
+        for rid in _pragma_ids(tok.string):
+            if rid not in KNOWN_RULE_IDS:
+                out.append(Violation(
+                    "JF000", path, tok.start[0], tok.start[1],
+                    f"pragma names unknown rule id {rid!r}: the suppression "
+                    "is silently inert; known ids are "
+                    f"{', '.join(sorted(KNOWN_RULE_IDS))}",
+                ))
+
+
+# --------------------------------------------------------------------------- #
 # driver
 # --------------------------------------------------------------------------- #
 
@@ -369,7 +425,9 @@ def _check_jf006(tree: ast.AST, path: str, out: list[Violation]) -> None:
 def lint_source(source: str, path: str) -> list[Violation]:
     """Lint one file's source text under the rules scoped to ``path``."""
     tree = ast.parse(source, filename=path)
+    lines = source.splitlines()
     out: list[Violation] = []
+    _check_jf000(source, path, out)
     if _in_routing_sim(path):
         _check_jf001(tree, path, out)
         _check_jf002(tree, path, out)
@@ -382,12 +440,12 @@ def lint_source(source: str, path: str) -> list[Violation]:
     if _in_solver(path):
         _check_jf006(tree, path, out)
 
-    lines = source.splitlines()
-
     def suppressed(v: Violation) -> bool:
+        if v.rule == "JF000":  # validation of the pragma itself
+            return False
         if not (1 <= v.line <= len(lines)):
             return False
-        return f"repro-lint: disable={v.rule}" in lines[v.line - 1]
+        return v.rule in _pragma_ids(lines[v.line - 1])
 
     return sorted(
         (v for v in out if not suppressed(v)),

@@ -39,38 +39,25 @@ __all__ = [
     "track_compiles",
 ]
 
-#: ``(module, attribute)`` of every module-level solver jit.  Kept as names
-#: (imported on demand) so importing repro.analysis.retrace does not drag in
-#: the whole solver stack, and so a renamed entry point fails loudly here.
-_SOLVER_JITS = (
-    ("repro.core.flow", "_mw_carry_init"),
-    ("repro.core.flow", "_mw_window"),
-    ("repro.core.flow", "_mw_final"),
-    ("repro.core.flow", "_mw_carry_init_batch"),
-    ("repro.core.flow", "_mw_window_batch"),
-    ("repro.core.flow", "_mw_final_batch"),
-    ("repro.core.mptcp", "_pf_solve"),
-    ("repro.sim.engine", "_waterfill_jit"),
-    ("repro.sim.engine", "_sim_scan"),
-    ("repro.kernels.minplus", "minplus_pallas"),
-    ("repro.kernels.congestion", "_congestion_pallas_batch"),
-    ("repro.kernels.congestion", "congestion_pallas"),
-    ("repro.kernels.power", "matmul_pallas"),
-    ("repro.kernels.ref", "minplus_ref"),
-    ("repro.kernels.ref", "matmul_ref"),
-    ("repro.kernels.ref", "congestion_ref"),
-)
-
 
 def named_solver_jits() -> dict:
-    """``{"module.attr": jitted}`` for every registered solver entry point."""
-    import importlib
+    """``{"module.attr": jitted}`` for every registered solver jit.
 
-    out = {}
-    for mod_name, attr in _SOLVER_JITS:
-        mod = importlib.import_module(mod_name)
-        out[f"{mod_name}.{attr}"] = getattr(mod, attr)
-    return out
+    Enumerated from :mod:`repro.analysis.registry` — the ``@solver_jit``
+    decorators at each definition site — not a hand-maintained list here.
+    The old tuple shipped with ``kernels/admission.py`` silently missing;
+    now an unregistered jit is a CI failure (irlint rule JF100), so this
+    view is complete by construction.  Dispatch wrappers
+    (``kind="wrapper"``) are excluded: a compilation-cache size only means
+    something on an actual jit.
+    """
+    from .registry import registered_entries
+
+    return {
+        name: e.resolve()
+        for name, e in registered_entries().items()
+        if e.kind == "jit"
+    }
 
 
 def solver_cache_sizes() -> dict:

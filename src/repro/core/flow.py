@@ -96,6 +96,7 @@ import jax.numpy as jnp
 
 from .. import env
 from ..analysis.contracts import check_path_system_batch, checks_enabled
+from ..analysis.registry import AuditCase, solver_jit
 from .routing import PathSystem
 from ..kernels import ops
 
@@ -540,6 +541,7 @@ def _resolve_backend(
 # --------------------------------------------------------------------------- #
 
 
+@solver_jit(spec="_ir_cases_mw_window")
 @functools.partial(jax.jit, static_argnames=("iters_total", "n_steps", "backend"))
 def _mw_window(
     path_edges: jnp.ndarray,  # (P, L) int32 padded with S (= n_slots)
@@ -610,6 +612,7 @@ def _mw_window(
     return carry
 
 
+@solver_jit(spec="_ir_cases_mw_final")
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _mw_final(
     path_edges: jnp.ndarray,
@@ -634,6 +637,7 @@ def _mw_final(
     return best_alpha, best_rates, 1.0 / best_alpha
 
 
+@solver_jit(spec="_ir_cases_mw_carry_init")
 @jax.jit
 def _mw_carry_init(
     x_init: jnp.ndarray, owner: jnp.ndarray, inv_cap: jnp.ndarray,
@@ -1037,6 +1041,7 @@ def _batch_seg_norm(x, owner, n_comm, owner_gather=None):
     return x / jnp.take_along_axis(s, owner, axis=1)
 
 
+@solver_jit(spec="_ir_cases_mw_carry_init_batch")
 @jax.jit
 def _mw_carry_init_batch(x_init, owner, inv_cap, demands):
     Bt, K = demands.shape
@@ -1050,6 +1055,7 @@ def _mw_carry_init_batch(x_init, owner, inv_cap, demands):
     )
 
 
+@solver_jit(spec="_ir_cases_mw_window_batch")
 @functools.partial(jax.jit, static_argnames=("iters_total", "n_steps", "backend"))
 def _mw_window_batch(
     path_edges,  # (Bt, P, L) int32 — or (P, L) shared
@@ -1113,6 +1119,7 @@ def _mw_window_batch(
     return carry
 
 
+@solver_jit(spec="_ir_cases_mw_final_batch")
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _mw_final_batch(path_edges, owner, demands, inv_cap, carry,
                     backend: str = "scatter", slot_gather=None):
@@ -1409,3 +1416,163 @@ def throughput(ps: PathSystem, method: str = "auto", iters: int = 400) -> FlowRe
             )
             return mw_concurrent_flow(ps, iters=iters)
     return mw_concurrent_flow(ps, iters=iters)
+
+
+# --------------------------------------------------------------------------- #
+# IR audit cases (python -m repro.analysis ir; see INVARIANTS.md JF1xx)
+# --------------------------------------------------------------------------- #
+# One shape bucket per entry is enough: the JF101–JF104 rules are properties
+# of the traced program structure, not of the shapes, and JF105 only needs a
+# stable reference point.  Contents are irrelevant — tracing never looks at
+# values — so builders hand out zeros/aranges without building a topology.
+
+_IR_P, _IR_L, _IR_S, _IR_K = 6, 3, 8, 3  # paths, max hops, slots, commodities
+_IR_B, _IR_D = 2, 4  # batch, gather fan-in width
+
+
+def _ir_seq_args():
+    import numpy as np
+
+    pe = np.full((_IR_P, _IR_L), _IR_S, np.int32)
+    pe[:, 0] = np.arange(_IR_P) % _IR_S
+    owner = np.sort(np.arange(_IR_P) % _IR_K).astype(np.int32)
+    demands = np.ones(_IR_K, np.float32)
+    inv_cap = np.ones(_IR_S, np.float32)
+    carry = (
+        np.ones(_IR_P, np.float32),
+        np.zeros(_IR_S, np.float32),
+        np.float32(0.0),
+        np.ones(_IR_P, np.float32),
+    )
+    return pe, owner, demands, inv_cap, carry
+
+
+def _ir_batch_args():
+    import numpy as np
+
+    pe, owner, _, _, _ = _ir_seq_args()
+    pe3 = np.broadcast_to(pe, (_IR_B, _IR_P, _IR_L)).copy()
+    owner2 = np.broadcast_to(owner, (_IR_B, _IR_P)).copy()
+    dem2 = np.ones((_IR_B, _IR_K), np.float32)
+    inv2 = np.ones((_IR_B, _IR_S), np.float32)
+    sval2 = np.ones((_IR_B, _IR_S), bool)
+    slot_gather = np.full((_IR_B, _IR_S, _IR_D), _IR_P * _IR_L, np.int32)
+    owner_gather = np.full((_IR_B, _IR_K, _IR_D), _IR_P, np.int32)
+    carry_b = (
+        np.ones((_IR_B, _IR_P), np.float32),
+        np.zeros((_IR_B, _IR_S), np.float32),
+        np.zeros(_IR_B, np.float32),
+        np.ones((_IR_B, _IR_P), np.float32),
+    )
+    active = np.ones(_IR_B, bool)
+    return pe3, owner2, dem2, inv2, sval2, slot_gather, owner_gather, carry_b, active
+
+
+_IR_DENSE_EXEMPT = {
+    "JF101": "dense backend contracts via matmul by design; its reassociation "
+    "drift vs scatter/gather is a documented contract (CG-3), not a bug",
+}
+
+
+def _ir_cases_mw_window():
+    from ..analysis.registry import AuditCase
+    import numpy as np
+
+    def mk(backend):
+        def make():
+            pe, owner, demands, inv_cap, carry = _ir_seq_args()
+            return (
+                (pe, owner, demands, inv_cap, carry, np.int32(0), np.int32(4)),
+                {"iters_total": 10, "n_steps": 4, "backend": backend},
+            )
+
+        return make
+
+    return [
+        AuditCase(label="scatter", make=mk("scatter"), backend="scatter"),
+        AuditCase(
+            label="dense",
+            make=mk("dense"),
+            backend="dense",
+            exempt=_IR_DENSE_EXEMPT,
+            budget=False,
+        ),
+    ]
+
+
+def _ir_cases_mw_final():
+    from ..analysis.registry import AuditCase
+
+    def make():
+        pe, owner, demands, inv_cap, carry = _ir_seq_args()
+        return (pe, owner, demands, inv_cap, carry), {"backend": "scatter"}
+
+    return [AuditCase(label="scatter", make=make, backend="scatter")]
+
+
+def _ir_cases_mw_carry_init():
+    from ..analysis.registry import AuditCase
+    import numpy as np
+
+    def make():
+        _, owner, demands, inv_cap, _ = _ir_seq_args()
+        return (np.ones(_IR_P, np.float32), owner, inv_cap, demands), {}
+
+    return [AuditCase(label="seq", make=make)]
+
+
+def _ir_cases_mw_carry_init_batch():
+    from ..analysis.registry import AuditCase
+    import numpy as np
+
+    def make():
+        _, owner2, dem2, inv2, _, _, _, _, _ = _ir_batch_args()
+        return (np.ones((_IR_B, _IR_P), np.float32), owner2, inv2, dem2), {}
+
+    return [AuditCase(label="batch", make=make)]
+
+
+def _ir_cases_mw_window_batch():
+    from ..analysis.registry import AuditCase
+    import numpy as np
+
+    def mk(backend, with_gather):
+        def make():
+            (pe3, owner2, dem2, inv2, sval2, slot_gather, owner_gather,
+             carry_b, active) = _ir_batch_args()
+            kw = {"iters_total": 10, "n_steps": 4, "backend": backend}
+            if with_gather:
+                kw["slot_gather"] = jnp.asarray(slot_gather)
+                kw["owner_gather"] = jnp.asarray(owner_gather)
+            return (
+                (pe3, owner2, dem2, inv2, sval2, carry_b, np.int32(0),
+                 np.int32(4), active),
+                kw,
+            )
+
+        return make
+
+    return [
+        AuditCase(label="gather", make=mk("gather", True), backend="gather"),
+        AuditCase(label="scatter", make=mk("scatter", False), backend="scatter"),
+        AuditCase(
+            label="dense",
+            make=mk("dense", False),
+            backend="dense",
+            exempt=_IR_DENSE_EXEMPT,
+            budget=False,
+        ),
+    ]
+
+
+def _ir_cases_mw_final_batch():
+    from ..analysis.registry import AuditCase
+
+    def make():
+        (pe3, owner2, dem2, inv2, _, slot_gather, _, carry_b, _) = _ir_batch_args()
+        return (
+            (pe3, owner2, dem2, inv2, carry_b),
+            {"backend": "gather", "slot_gather": jnp.asarray(slot_gather)},
+        )
+
+    return [AuditCase(label="gather", make=make, backend="gather")]

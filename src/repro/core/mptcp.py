@@ -38,6 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import AuditCase, solver_jit
 from .flow import _resolve_backend, _warm_split, make_congestion_fn
 from .routing import PathSystem
 
@@ -59,6 +60,7 @@ class MptcpResult:
         )
 
 
+@solver_jit(spec="_ir_cases_pf_solve")
 @functools.partial(jax.jit, static_argnames=("iters", "backend"))
 def _pf_solve(
     path_edges, owner, demands, caps, n_comm: int, iters: int,
@@ -164,3 +166,19 @@ def mptcp_throughput(
     # Jain's fairness index over per-commodity normalized throughput
     jain = float((norm.sum() ** 2) / (len(norm) * (norm**2).sum() + 1e-12))
     return MptcpResult(norm, float(norm.mean()), jain, iters, np.asarray(r))
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+
+def _ir_cases_pf_solve():
+    from .flow import _ir_seq_args
+
+    def make():
+        pe, owner, demands, inv_cap, _ = _ir_seq_args()
+        caps = 1.0 / inv_cap
+        return (pe, owner, demands, caps, int(demands.shape[0])), {
+            "iters": 8,
+            "backend": "scatter",
+        }
+
+    return [AuditCase(label="scatter", make=make, backend="scatter")]

@@ -39,6 +39,12 @@ per-topology cache (APSP matrix, padded neighbor table, edge-slot lookup) so
 sweeping traffic matrices over one topology — the paper's §4 methodology —
 pays for the distance computation once.
 
+This module is host-side enumeration feeding the jitted solvers and holds
+no module-level jits today; it stays listed in
+``repro.analysis.registry.SOLVER_MODULES`` so the first jit added here must
+register with ``@solver_jit`` or the IR audit's JF100 registration rule
+fails CI (``python -m repro.analysis ir``).
+
 Memory envelope (the 10k-switch rung)
 -------------------------------------
 Distance state is held in the **canonical int16 hop representation**

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..analysis.registry import AuditCase, solver_jit
+
 __all__ = [
     "admission_prune",
     "admission_ref",
@@ -80,6 +82,7 @@ def admission_kernel(d_ref, r_ref, c_ref, p_ref, o_ref):
     o_ref[...] = (ok & ~seen).astype(jnp.int8)
 
 
+@solver_jit(spec="_ir_cases_admission")
 @functools.partial(jax.jit, static_argnames=("bm", "bc", "interpret"))
 def admission_pallas(
     dvals: jax.Array,
@@ -165,3 +168,23 @@ def admission_prune(
     if pref is None:
         pref = jnp.zeros((cand.shape[0], 0), dtype=jnp.int32)
     return admission_pallas(dvals, rem, cand, jnp.asarray(pref))
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+
+def _ir_cases_admission():
+    import numpy as np
+
+    def make():
+        M, C = 4, 6
+        dvals = np.ones((M, C), np.float32)
+        rem = np.ones(M, np.float32)
+        cand = np.ones((M, C), np.int32)
+        pref = np.full((M, 3), -1, np.int32)
+        return (dvals, rem, cand, pref), {
+            "bm": 8, "bc": 128, "interpret": True,
+        }
+
+    # interpret-mode lowering: auditable jaxpr, but its HLO is an emulation
+    # artifact — excluded from the JF105 budget.
+    return [AuditCase(label="interpret", make=make, budget=False)]

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..analysis.registry import AuditCase, solver_jit
+
 __all__ = [
     "congestion_pallas",
     "congestion_kernel",
@@ -114,6 +116,7 @@ def congestion_batch_kernel(b_ref, r_ref, w_ref, loads_ref, costs_ref):
     costs_ref[0, ...] += jnp.dot(b, w.T, preferred_element_type=costs_ref.dtype)
 
 
+@solver_jit(spec="_ir_cases_congestion_batch")
 @functools.partial(jax.jit, static_argnames=("bp", "be", "interpret"))
 def _congestion_pallas_batch(
     incidence: jax.Array,  # (Bt, P, E) {0,1}
@@ -153,6 +156,7 @@ def _congestion_pallas_batch(
     return loads[:, 0, :E], costs[:, :P, 0]
 
 
+@solver_jit(spec="_ir_cases_congestion")
 @functools.partial(jax.jit, static_argnames=("bp", "be", "interpret"))
 def congestion_pallas(
     incidence: jax.Array,  # (P, E) {0,1}, or stacked (Bt, P, E)
@@ -203,3 +207,39 @@ def congestion_pallas(
         interpret=interpret,
     )(b_p, r_p, w_p)
     return loads[0, :E], costs[:P, 0]
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+
+_IR_MXU_EXEMPT = {
+    "JF101": "the fused congestion kernel IS the dense-incidence matmul "
+    "backend; its reassociation drift vs scatter/gather is the documented "
+    "dense-backend contract (CG-3)",
+}
+
+
+def _ir_cases_congestion():
+    import numpy as np
+
+    def make():
+        inc = np.ones((4, 6), np.float32)
+        return (inc, np.ones(4, np.float32), np.ones(6, np.float32)), {
+            "bp": 8, "be": 128, "interpret": True,
+        }
+
+    return [AuditCase(label="interpret", make=make, exempt=_IR_MXU_EXEMPT,
+                      budget=False)]
+
+
+def _ir_cases_congestion_batch():
+    import numpy as np
+
+    def make():
+        inc3 = np.ones((2, 4, 6), np.float32)
+        return (inc3, np.ones((2, 4), np.float32),
+                np.ones((2, 6), np.float32)), {
+            "bp": 8, "be": 128, "interpret": True,
+        }
+
+    return [AuditCase(label="interpret", make=make, exempt=_IR_MXU_EXEMPT,
+                      budget=False)]

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..analysis.registry import AuditCase, solver_jit
+
 __all__ = ["minplus_pallas", "minplus_kernel", "check_minplus_dtype"]
 
 
@@ -76,6 +78,7 @@ def minplus_kernel(a_ref, b_ref, o_ref):
     o_ref[...] = acc
 
 
+@solver_jit(spec="_ir_cases_minplus")
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
 )
@@ -116,3 +119,15 @@ def minplus_pallas(
         interpret=interpret,
     )(a_p, b_p)
     return out[:m, :n]
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+
+def _ir_cases_minplus():
+    import numpy as np
+
+    def make():
+        a = np.ones((8, 8), np.float32)
+        return (a, a), {"bm": 8, "bn": 128, "bk": 8, "interpret": True}
+
+    return [AuditCase(label="interpret", make=make, budget=False)]

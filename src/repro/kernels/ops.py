@@ -40,6 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import AuditCase, solver_jit
 from . import ref
 from .congestion import congestion_pallas
 from .minplus import minplus_pallas
@@ -120,6 +121,7 @@ def matmul(a, b, backend: str = "auto", **blocks):
     return matmul_pallas(a, b, **blocks)
 
 
+@solver_jit(spec="_ir_cases_ops_congestion", kind="wrapper")
 def congestion(incidence, rates, prices, backend: str = "auto", **blocks):
     """Fused (B^T r, B w); a rank-3 ``incidence`` runs one fused pass per
     stacked batch member (both backends accept it — see congestion_pallas)."""
@@ -128,6 +130,7 @@ def congestion(incidence, rates, prices, backend: str = "auto", **blocks):
     return congestion_pallas(incidence, rates, prices, **blocks)
 
 
+@solver_jit(spec="_ir_cases_ops_congestion_loads", kind="wrapper")
 def congestion_loads(incidence, rates, backend: str = "auto", **blocks):
     """Loads-only ``B^T r`` over a dense (or stacked rank-3) incidence.
 
@@ -337,3 +340,34 @@ def power_iteration_lambda2(
     lam_b = jnp.diag(q.T @ w)
     lam2 = c - jnp.max(lam_b)
     return jnp.maximum(lam2, 0.0)
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+# Dispatch wrappers, not jits (kind="wrapper"): traced for the JF rules on
+# their CPU/ref path, but never budgeted (JF105 needs a .lower()-able jit
+# and the wrapped refs carry their own budgets).
+
+_IR_WRAPPER_EXEMPT = {
+    "JF101": "the ref dispatch path is the dense matmul oracle; bit-exact "
+    "solver paths never route dense work through these wrappers",
+}
+
+
+def _ir_cases_ops_congestion():
+    def make():
+        inc = np.ones((4, 6), np.float32)
+        return (inc, np.ones(4, np.float32), np.ones(6, np.float32)), {
+            "backend": "ref",
+        }
+
+    return [AuditCase(label="ref", make=make, exempt=_IR_WRAPPER_EXEMPT,
+                      budget=False)]
+
+
+def _ir_cases_ops_congestion_loads():
+    def make():
+        inc = np.ones((4, 6), np.float32)
+        return (inc, np.ones(4, np.float32)), {"backend": "ref"}
+
+    return [AuditCase(label="ref", make=make, exempt=_IR_WRAPPER_EXEMPT,
+                      budget=False)]

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..analysis.registry import AuditCase, solver_jit
+
 __all__ = ["matmul_pallas", "matmul_kernel", "check_matmul_dtype"]
 
 
@@ -55,6 +57,7 @@ def matmul_kernel(a_ref, b_ref, o_ref):
     )
 
 
+@solver_jit(spec="_ir_cases_matmul")
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul_pallas(
     a: jax.Array,
@@ -93,3 +96,21 @@ def matmul_pallas(
         interpret=interpret,
     )(a_p, b_p)
     return out[:m, :n]
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+
+def _ir_cases_matmul():
+    import numpy as np
+
+    def make():
+        a = np.ones((8, 8), np.float32)
+        return (a, a), {"bm": 8, "bn": 128, "bk": 8, "interpret": True}
+
+    return [AuditCase(
+        label="interpret",
+        make=make,
+        exempt={"JF101": "a matmul kernel contracts by definition; no "
+                "bit-exactness contract applies to the spectral-gap path"},
+        budget=False,
+    )]

@@ -5,11 +5,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import AuditCase, solver_jit
 from .minplus import check_minplus_dtype
 
 __all__ = ["minplus_ref", "matmul_ref", "congestion_ref", "apsp_ref"]
 
 
+@solver_jit(spec="_ir_cases_minplus_ref")
 @jax.jit
 def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """C[i, j] = min_k A[i, k] + B[k, j] (tropical matmul).
@@ -21,12 +23,14 @@ def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
 
 
+@solver_jit(spec="_ir_cases_matmul_ref")
 @jax.jit
 def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     out_dtype = jnp.promote_types(a.dtype, jnp.float32)
     return jnp.dot(a, b, preferred_element_type=out_dtype)
 
 
+@solver_jit(spec="_ir_cases_congestion_ref")
 @jax.jit
 def congestion_ref(
     incidence: jax.Array, rates: jax.Array, prices: jax.Array
@@ -59,3 +63,42 @@ def apsp_ref(adj: jax.Array) -> jax.Array:
     for _ in range(steps):
         d = minplus_ref(d, d)
     return d
+
+
+# ---- IR audit cases (python -m repro.analysis ir) ------------------------- #
+
+_IR_DENSE_REF_EXEMPT = {
+    "JF101": "the dense reference contracts via matmul/einsum by design; it "
+    "is the oracle the fused kernel is tested against, not a bit-exact "
+    "solver path",
+}
+
+
+def _ir_cases_minplus_ref():
+    import numpy as np
+
+    def make():
+        a = np.ones((8, 8), np.float32)
+        return (a, a), {}
+
+    return [AuditCase(label="f32", make=make)]
+
+
+def _ir_cases_matmul_ref():
+    import numpy as np
+
+    def make():
+        a = np.ones((8, 8), np.float32)
+        return (a, a), {}
+
+    return [AuditCase(label="f32", make=make, exempt=_IR_DENSE_REF_EXEMPT)]
+
+
+def _ir_cases_congestion_ref():
+    import numpy as np
+
+    def make():
+        inc = np.ones((4, 6), np.float32)
+        return (inc, np.ones(4, np.float32), np.ones(6, np.float32)), {}
+
+    return [AuditCase(label="rank2", make=make, exempt=_IR_DENSE_REF_EXEMPT)]

@@ -151,6 +151,21 @@ _RULE_FIXTURES = [
         "def warm(cfg):\n    return jax.jit(lambda x: x * cfg.dt)\n",
         "@jax.jit\ndef warm_step(x, dt):\n    return x * dt\n",
     ),
+    (
+        "JF000",
+        "src/repro/core/flow.py",
+        "x = 1  # repro-lint: disable=JF999\n",
+        "x = 1  # repro-lint: disable=JF005\n",
+    ),
+    (
+        "JF000",
+        "src/repro/sim/engine.py",
+        # comma lists are validated per id; IR rule ids (JF100-JF105) are
+        # legitimate pragma targets even though the AST linter never fires
+        # them itself
+        "y = 2  # repro-lint: disable=JF005,JF01\n",
+        "y = 2  # repro-lint: disable=JF005,JF104\n",
+    ),
 ]
 
 
@@ -189,6 +204,19 @@ def test_rules_are_scoped():
 def test_pragma_suppresses():
     src = 'import numpy as np\no = np.argsort(k)  # repro-lint: disable=JF002\n'
     assert lint_source(src, "src/repro/core/routing.py") == []
+
+
+def test_pragma_with_unknown_id_does_not_suppress():
+    # a typo'd pragma must not silently disarm the rule it meant to name:
+    # the original violation still fires, plus JF000 for the bad id
+    src = 'import numpy as np\no = np.argsort(k)  # repro-lint: disable=JF02\n'
+    rules = sorted(v.rule for v in lint_source(src, "src/repro/core/routing.py"))
+    assert rules == ["JF000", "JF002"]
+    # and JF000 cannot suppress itself
+    src = "x = 1  # repro-lint: disable=JF999,JF000\n"
+    assert [v.rule for v in lint_source(src, "src/repro/core/flow.py")] == [
+        "JF000"
+    ]
 
 
 def test_tree_lints_clean_at_head():

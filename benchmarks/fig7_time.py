@@ -1,0 +1,19 @@
+# Time-domain resilience: MTBF failure/repair processes against live traffic.
+"""Fig. 7 companion — throughput retention under a running failure process.
+
+Thin harness tag around :func:`benchmarks.fig7_resilience.run_time_domain`
+so ``python -m benchmarks.run fig7time`` exercises the event-segmented
+simulator (``repro.sim.events``) without re-running the static fig7 sweep.
+Rows report per-MTBF throughput retention, blackholed volume, and the
+max conservation error (asserted ``<= 1e-3`` of offered in-bench);
+the JSON artifact lands in ``artifacts/bench/fig7_time_domain.json``.
+"""
+
+from __future__ import annotations
+
+from .fig7_resilience import run_time_domain
+
+run = run_time_domain
+
+if __name__ == "__main__":
+    print("\n".join(run()))

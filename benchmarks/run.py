@@ -21,6 +21,7 @@ MODULES = [
     ("fig5", "benchmarks.fig5_incremental"),
     ("fig6", "benchmarks.fig6_legup"),
     ("fig7", "benchmarks.fig7_resilience"),
+    ("fig7time", "benchmarks.fig7_time"),
     ("fig8", "benchmarks.fig8_mptcp"),
     ("fig9ecmp", "benchmarks.fig9_ecmp"),
     ("table1", "benchmarks.table1_diversity"),

@@ -29,6 +29,7 @@ from .. import env
 __all__ = [
     "ContractViolation",
     "check_built_batch",
+    "check_carry_migration",
     "check_hop_matrix",
     "check_path_system",
     "check_path_system_batch",
@@ -576,3 +577,142 @@ def check_sim_state(res, *, name: str = "sim_result") -> None:
         idx = tuple(map(int, np.argwhere(
             (util < -1e-6) | ~np.isfinite(util))[0]))
         _fail(name, f"util_sum at {idx} must be finite >= 0")
+
+    # ---- blackhole + volume conservation (guarded with getattr so
+    # hand-built fixtures predating the event engine stay valid) ----------- #
+    bh = getattr(res, "blackholed", None)
+    bh_tot = getattr(res, "blackholed_total", None)
+    inflight = getattr(res, "inflight", None)
+    if bh is None or bh_tot is None or inflight is None:
+        return
+    bh = np.asarray(bh)
+    bh_tot = np.asarray(bh_tot)
+    inflight = np.asarray(inflight)
+    if bh.shape != thr.shape or bh_tot.shape != (B,) or \
+            inflight.shape != (B,):
+        _fail(name, f"blackholed must be {thr.shape}, blackholed_total/"
+                    f"inflight (B={B},); got {bh.shape} / {bh_tot.shape} / "
+                    f"{inflight.shape}")
+    if np.any(bh < 0) or np.any(~np.isfinite(bh)):
+        t, b = map(int, np.argwhere((bh < 0) | ~np.isfinite(bh))[0])
+        _fail(name, f"blackholed[{t}, {b}]={bh[t, b]} must be finite >= 0")
+    if np.any(bh_tot < 0) or np.any(~np.isfinite(bh_tot)) or \
+            np.any(inflight < 0) or np.any(~np.isfinite(inflight)):
+        b = int(np.argmax((bh_tot < 0) | ~np.isfinite(bh_tot)
+                          | (inflight < 0) | ~np.isfinite(inflight)))
+        _fail(name, f"blackholed_total[{b}]={bh_tot[b]} / inflight[{b}]="
+                    f"{inflight[b]} must be finite >= 0")
+    # per-step blackhole totals never exceed the running total (the total
+    # additionally counts volume killed outright at event boundaries)
+    step_bh = bh.sum(axis=0, dtype=np.float64)
+    bh_budget = 1e-3 * np.maximum(bh_tot, 1.0)
+    if np.any(step_bh > bh_tot + bh_budget):
+        b = int(np.argmax(step_bh > bh_tot + bh_budget))
+        _fail(name, f"instance {b}: per-step blackholed sum {step_bh[b]} "
+                    f"exceeds blackholed_total {bh_tot[b]}")
+    # conservation: every admitted byte is delivered, still in flight, or
+    # blackholed.  (drops count arrivals never admitted, so they carry no
+    # volume in this ledger.)
+    tot_off = off.sum(axis=1, dtype=np.float64)
+    lhs = tot_del + bh_tot.astype(np.float64) + inflight.astype(np.float64)
+    budget = 1e-3 * np.maximum(tot_off, 1.0)
+    if np.any(np.abs(tot_off - lhs) > budget):
+        b = int(np.argmax(np.abs(tot_off - lhs) > budget))
+        _fail(name, f"instance {b}: offered {tot_off[b]} != delivered "
+                    f"{tot_del[b]} + blackholed {bh_tot[b]} + in-flight "
+                    f"{inflight[b]} (volume conservation broke)")
+
+
+# --------------------------------------------------------------------------- #
+# segmented-scan carry migration (repro.sim.events)
+# --------------------------------------------------------------------------- #
+
+
+def check_carry_migration(
+    row_old, row_new, rem_old, rem_new, age_old, age_new, fid_old, fid_new,
+    hold_old, hold_new, fwd_maps, p_old: int, p_new: int, lag: int,
+    *, name: str = "carry_migration",
+) -> None:
+    """Validate one event-boundary migration of the sim scan carry.
+
+    ``fwd_maps[i]`` maps instance ``i``'s old path rows to new rows (-1 =
+    vanished) — the inverse of the composed ``row_map`` pedigree, so its
+    injectivity here IS the row_map-injectivity contract on migrated
+    carries.  Slot-level checks: empty slots stay empty, surviving flows
+    keep row (through ``fwd``), ``rem``/``age``/``fid`` bit-exactly, and
+    every non-surviving flow is either killed (freed slot, zero state) or
+    re-selected (state preserved, ``hold`` within the detection lag).
+    """
+    row_old = np.asarray(row_old)
+    row_new = np.asarray(row_new)
+    if row_old.shape != row_new.shape:
+        _fail(name, f"slot table shape changed: {row_old.shape} -> "
+                    f"{row_new.shape}")
+    B = row_old.shape[0]
+    if len(fwd_maps) != B:
+        _fail(name, f"fwd_maps has {len(fwd_maps)} entries for B={B}")
+    rem_old, rem_new = np.asarray(rem_old), np.asarray(rem_new)
+    age_old, age_new = np.asarray(age_old), np.asarray(age_new)
+    fid_old, fid_new = np.asarray(fid_old), np.asarray(fid_new)
+    hold_old, hold_new = np.asarray(hold_old), np.asarray(hold_new)
+    for i in range(B):
+        fwd = np.asarray(fwd_maps[i])
+        live = fwd[fwd >= 0]
+        if live.size != len(np.unique(live)):
+            vals, cnts = np.unique(live, return_counts=True)
+            _fail(name, f"instance {i}: fwd map is not injective — new row "
+                        f"{int(vals[np.argmax(cnts > 1)])} claimed by "
+                        "multiple old rows (two flows would share a path "
+                        "row's identity)")
+        if live.size and (live.min() < 0 or live.max() >= p_new):
+            _fail(name, f"instance {i}: fwd map targets outside "
+                        f"[0, {p_new})")
+        empty = row_old[i] == p_old
+        if np.any(row_new[i][empty] != p_new):
+            f = int(np.flatnonzero(empty & (row_new[i] != p_new))[0])
+            _fail(name, f"instance {i} slot {f}: empty slot materialized a "
+                        f"flow (row {int(row_new[i][f])})")
+        act = ~empty
+        if len(fwd):
+            surv = act & (fwd[np.clip(row_old[i], 0, len(fwd) - 1)] >= 0)
+        else:
+            surv = np.zeros_like(act)
+        if np.any(surv):
+            sf = np.flatnonzero(surv)
+            if np.any(row_new[i][sf] != fwd[row_old[i][sf]]):
+                f = int(sf[np.argmax(row_new[i][sf]
+                                     != fwd[row_old[i][sf]])])
+                _fail(name, f"instance {i} slot {f}: surviving flow moved "
+                            f"to row {int(row_new[i][f])} != fwd["
+                            f"{int(row_old[i][f])}]="
+                            f"{int(fwd[row_old[i][f]])}")
+            same = (
+                np.array_equal(rem_new[i][sf], rem_old[i][sf])
+                and np.array_equal(age_new[i][sf], age_old[i][sf])
+                and np.array_equal(fid_new[i][sf], fid_old[i][sf])
+                and np.array_equal(hold_new[i][sf], hold_old[i][sf])
+            )
+            if not same:
+                _fail(name, f"instance {i}: surviving flows must keep "
+                            "rem/age/fid/hold bit-exactly")
+        moved = act & ~surv
+        for f in np.flatnonzero(moved):
+            if row_new[i][f] == p_new:  # killed
+                if rem_new[i][f] != 0.0 or hold_new[i][f] != 0:
+                    _fail(name, f"instance {i} slot {f}: killed flow must "
+                                f"zero its state (rem={rem_new[i][f]}, "
+                                f"hold={int(hold_new[i][f])})")
+            else:  # re-selected
+                if not (0 <= row_new[i][f] < p_new):
+                    _fail(name, f"instance {i} slot {f}: re-selected row "
+                                f"{int(row_new[i][f])} outside [0, {p_new})")
+                if rem_new[i][f] != rem_old[i][f] or \
+                        age_new[i][f] != age_old[i][f] or \
+                        fid_new[i][f] != fid_old[i][f]:
+                    _fail(name, f"instance {i} slot {f}: re-selected flow "
+                                "must preserve rem/age/fid bit-exactly")
+                hi = max(int(lag), int(hold_old[i][f]))
+                if not (0 <= hold_new[i][f] <= hi):
+                    _fail(name, f"instance {i} slot {f}: hold="
+                                f"{int(hold_new[i][f])} outside [0, {hi}] "
+                                f"(lag={int(lag)})")

@@ -58,6 +58,7 @@ SOLVER_MODULES = (
     "repro.core.routing",
     "repro.core.mptcp",
     "repro.sim.engine",
+    "repro.sim.events",
     "repro.kernels.ops",
     "repro.kernels.admission",
     "repro.kernels.congestion",

@@ -91,12 +91,15 @@ def _record_delta(
     parent: Topology,
     child: Topology,
     node_remap: np.ndarray | None = None,
+    kind: str = "expand",
 ) -> Topology:
     """Stamp the module's delta contract on ``child.meta`` (see docstring).
 
-    Always overwrites all four keys — meta dicts propagate through
+    Always overwrites all the delta keys — meta dicts propagate through
     ``Topology.copy``, so stale delta keys from an earlier mutation must
-    never survive a new one.
+    never survive a new one.  ``kind`` names the producer
+    (``meta["delta_kind"]``) for event-log attribution, mirroring
+    ``core.failures``.
     """
     added, removed_mask, _ = edge_delta(parent, child, node_remap)
     child.meta["edges_added"] = [tuple(map(int, e)) for e in added]
@@ -107,6 +110,7 @@ def _record_delta(
         [int(x) for x in node_remap] if node_remap is not None else None
     )
     child.meta["delta_parent"] = edge_fingerprint(parent)
+    child.meta["delta_kind"] = kind
     return child
 
 
@@ -178,7 +182,7 @@ def rewire_free_ports(top: Topology, seed: int | np.random.Generator = 0) -> Top
     rng = seed if isinstance(seed, np.random.Generator) else np.random.default_rng(seed)
     mut = _Mut(top)
     _rewire(mut, rng)
-    return _record_delta(top, mut.finish(name=top.name))
+    return _record_delta(top, mut.finish(name=top.name), kind="rewire")
 
 
 def add_switch(
@@ -208,7 +212,7 @@ def add_switch(
     if mut.free[u] > 0:
         _rewire(mut, rng)
     out = mut.finish(name=name or top.name)
-    return _record_delta(top, out)
+    return _record_delta(top, out, kind="add_switch")
 
 
 def remove_switch(
@@ -236,7 +240,9 @@ def remove_switch(
     )
     mut = _Mut(shrunk)
     _rewire(mut, rng)
-    return _record_delta(top, mut.finish(name=top.name), node_remap=remap)
+    return _record_delta(
+        top, mut.finish(name=top.name), node_remap=remap, kind="remove_switch"
+    )
 
 
 def _modal_spec(top: Topology) -> tuple[int, int]:

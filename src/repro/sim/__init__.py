@@ -15,11 +15,18 @@ missing time domain:
   per-instance masks; the max-min waterfilling inner loop reuses the MW
   solver's congestion backends (``gather`` fan-in tables on CPU, the fused
   rank-3 ``congestion_pallas`` kernel on TPU);
+* ``events``    — live fault injection (§4.3): ``simulate_events`` splits
+  the scan at scheduled failures / repairs / expansions, repairs routing
+  with ``update_path_system``, and migrates the live carry via ``row_map``
+  — surviving flows keep state bit-exactly, disrupted flows blackhole for
+  a detection lag then re-select;
 * ``workloads`` — scenario generators (steady Poisson, diurnal wave,
-  elephant/mice, permutation churn, tenant arrival/departure riding
-  ``core.expansion`` + ``routing.update_path_system``);
+  elephant/mice, permutation churn, MTBF/MTTR failure schedules, tenant
+  arrival/departure riding ``core.expansion`` +
+  ``routing.update_path_system``);
 * ``telemetry`` — FCT percentiles, per-link utilization, throughput
-  timeseries reductions, and the Table-1 / Fig-9 path-diversity counters.
+  timeseries reductions, per-event retention/disruption summaries, and the
+  Table-1 / Fig-9 path-diversity counters.
 
 Import validates the ``REPRO_SIM_MAX_STEPS`` / ``REPRO_SIM_MAX_BATCH``
 environment caps (mirroring ``REPRO_APSP_BACKEND``'s fail-loudly-at-startup
@@ -42,7 +49,15 @@ from .engine import (
     simulate,
     waterfill_rates,
 )
+from .events import (
+    EVENT_KINDS,
+    Event,
+    EventSimResult,
+    simulate_events,
+    validate_schedule,
+)
 from .telemetry import (
+    event_summary,
     fct_percentiles,
     link_utilization,
     path_diversity,
@@ -56,12 +71,20 @@ from .workloads import (
     diurnal_wave,
     elephant_mice,
     permutation_churn,
+    poisson_failure_schedule,
     run_tenant_churn,
     steady_poisson,
     tenant_churn_segments,
 )
 
 __all__ = [
+    "Event",
+    "EVENT_KINDS",
+    "EventSimResult",
+    "event_summary",
+    "poisson_failure_schedule",
+    "simulate_events",
+    "validate_schedule",
     "ecmp_path_system",
     "ecmp_group_sizes",
     "fattree_ecmp_check",

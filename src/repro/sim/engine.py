@@ -98,6 +98,7 @@ class SimConfig:
     max_arrivals: int = 32  # Poisson arrival cap per step per instance
     nbins: int = 24  # log2-spaced FCT histogram bins
     salt: int = 0x5EED  # ECMP hash salt
+    bh_rate: float = 1.0  # blackhole drain rate of a held flow (volume/step)
 
 
 @dataclasses.dataclass
@@ -114,6 +115,9 @@ class SimResult:
     util_sum: np.ndarray  # (B, S) per-step relative link loads, summed
     drops: np.ndarray  # (B,) arrivals lost (slot table full / per-step cap)
     admitted: np.ndarray  # (B,) arrivals placed into a slot
+    blackholed: np.ndarray  # (T, B) volume blackholed per step (held flows)
+    blackholed_total: np.ndarray  # (B,) total blackholed incl. event kills
+    inflight: np.ndarray  # (B,) admitted volume still undelivered at the end
     demands: np.ndarray  # (B, K [+1]) the batch's demand vectors
     slot_valid: np.ndarray  # (B, S) real-slot mask
     n_steps: int
@@ -436,15 +440,53 @@ def _owner_padded(batch: PathSystemBatch, n_comm: int) -> np.ndarray:
 # --------------------------------------------------------------------------- #
 
 
+def _init_carry(
+    n_batch: int, n_flows: int, p_max: int, s_max: int, n_comm: int,
+    nbins: int,
+):
+    """Fresh scan carry for a cold start (every slot empty).
+
+    The carry is the unit of state the segmented driver
+    (``repro.sim.events``) migrates across topology deltas, so its layout
+    is a contract: ``(row, rem, age, fid, hold, next_id, rel_prev,
+    fct_hist, fct_sum, fct_cnt, comm_del, comm_off, util_sum, drops,
+    admitted, bh_sum)``.  ``fid`` records each slot's flow id (the ECMP
+    hash input, needed to re-select paths deterministically after a
+    failure); ``hold`` counts down the detection/reconvergence lag during
+    which a slot's traffic is blackholed; ``bh_sum`` accumulates the
+    blackholed volume.  All three are exact no-ops while no event has set
+    ``hold`` — plain ``simulate`` results are bit-identical to the
+    pre-event engine.
+    """
+    B, F = n_batch, n_flows
+    return (
+        jnp.full((B, F), p_max, jnp.int32),  # row: empty sentinel
+        jnp.zeros((B, F), jnp.float32),  # rem
+        jnp.zeros((B, F), jnp.float32),  # age
+        jnp.zeros((B, F), jnp.uint32),  # fid
+        jnp.zeros((B, F), jnp.int32),  # hold (blackhole countdown)
+        (jnp.arange(B, dtype=jnp.uint32) << 20),  # next_id: decorrelated
+        jnp.zeros((B, s_max), jnp.float32),  # rel_prev
+        jnp.zeros((B, nbins + 1), jnp.float32),  # fct_hist (+ garbage col)
+        jnp.zeros((B,), jnp.float32),  # fct_sum
+        jnp.zeros((B,), jnp.int32),  # fct_cnt
+        jnp.zeros((B, n_comm + 1), jnp.float32),  # comm_del (+ dummy col)
+        jnp.zeros((B, n_comm + 1), jnp.float32),  # comm_off (+ dummy col)
+        jnp.zeros((B, s_max), jnp.float32),  # util_sum
+        jnp.zeros((B,), jnp.int32),  # drops
+        jnp.zeros((B,), jnp.int32),  # admitted
+        jnp.zeros((B,), jnp.float32),  # bh_sum
+    )
+
+
 @solver_jit(spec="_ir_cases_sim_scan")
 @functools.partial(
     jax.jit,
-    static_argnames=(
-        "policy", "wf_iters", "wf_rule", "n_flows", "n_arrivals", "nbins",
-        "backend",
-    ),
+    static_argnames=("policy", "wf_iters", "wf_rule", "n_arrivals", "backend"),
 )
 def _sim_scan(
+    carry0,  # scan carry (see _init_carry; may be a migrated mid-run carry)
+    ts,  # (T,) int32 ABSOLUTE step indices (the per-step RNG fold source)
     pe,  # (B, P, L) int32 — or (P, L) shared
     owner_pad,  # (B, P+1) int32, commodity of each row (K = dummy)
     cap,  # (B, S) f32, +inf on padded slots
@@ -459,6 +501,7 @@ def _sim_scan(
     epoch_sched,  # (T,) int32 index into logits_epochs
     size_params,  # (3,) f32: (p_elephant, size_mice, size_elephant)
     dt,  # f32 scalar
+    bh_rate,  # f32 scalar: blackhole drain rate of held flows
     salt,  # uint32 scalar
     key,  # PRNG key
     slot_gather,  # gather-backend fan-in tables or None
@@ -466,9 +509,7 @@ def _sim_scan(
     policy: str,
     wf_iters: int,
     wf_rule: str,
-    n_flows: int,
     n_arrivals: int,
-    nbins: int,
     backend: str,
 ):
     B, K = rows_cnt.shape
@@ -476,8 +517,9 @@ def _sim_scan(
     L = pe.shape[-1]
     S = inv.shape[-1]
     D = rows_tab.shape[-1]
-    F, A = n_flows, n_arrivals
-    T = rate_sched.shape[0]
+    A = n_arrivals
+    F = carry0[0].shape[-1]
+    nbins = carry0[7].shape[-1] - 1
     W_new = A * D if policy == "mptcp" else A
     loads_of = make_loads_fn_batch(pe, S, B, backend, slot_gather)
     bidx = jnp.arange(B)[:, None]
@@ -488,8 +530,9 @@ def _sim_scan(
         )
 
     def step(carry, inp):
-        (row, rem, age, next_id, rel_prev, fct_hist, fct_sum, fct_cnt,
-         comm_del, comm_off, util_sum, drops, admitted) = carry
+        (row, rem, age, fid_c, hold, next_id, rel_prev, fct_hist, fct_sum,
+         fct_cnt, comm_del, comm_off, util_sum, drops, admitted,
+         bh_sum) = carry
         t, rate_t, ep = inp
         k_n, k_c, k_sz = jax.random.split(jax.random.fold_in(key, t), 3)
 
@@ -525,7 +568,7 @@ def _sim_scan(
                 jnp.int32
             )
             prow = jnp.take_along_axis(crows, j[:, :, None], axis=2)[:, :, 0]
-            new_live, new_row, new_rem = cand_live, prow, size
+            new_live, new_row, new_rem, new_fid = cand_live, prow, size, fid
         elif policy == "ksp_lc":
             # least-congested: bottleneck utilization of each candidate
             # under the PREVIOUS step's loads (flow-level adaptive routing)
@@ -540,7 +583,7 @@ def _sim_scan(
             util = jnp.where(valid, util, jnp.inf)
             j = jnp.argmin(util, axis=2)  # first minimum: deterministic
             prow = jnp.take_along_axis(crows, j[:, :, None], axis=2)[:, :, 0]
-            new_live, new_row, new_rem = cand_live, prow, size
+            new_live, new_row, new_rem, new_fid = cand_live, prow, size, fid
         else:  # mptcp: one subflow per candidate path, size split evenly
             sub = jnp.arange(D)[None, None, :] < ccnt[:, :, None]
             new_live = (cand_live[:, :, None] & sub).reshape(B, W_new)
@@ -549,12 +592,16 @@ def _sim_scan(
             new_rem = jnp.broadcast_to(
                 per[:, :, None], (B, A, D)
             ).reshape(B, W_new)
+            new_fid = jnp.broadcast_to(  # subflows share the parent's id
+                fid[:, :, None], (B, A, D)
+            ).reshape(B, W_new)
 
         # ---- place new flows into free slots (live-first packing) -------- #
         order = jnp.argsort(~new_live, axis=1)  # stable: live flows first
         new_live = jnp.take_along_axis(new_live, order, axis=1)
         new_row = jnp.take_along_axis(new_row, order, axis=1)
         new_rem = jnp.take_along_axis(new_rem, order, axis=1)
+        new_fid = jnp.take_along_axis(new_fid, order, axis=1)
         free = row == P
         n_free = free.sum(axis=1)
         target = jnp.argsort(~free, axis=1)[:, :W_new]  # free slots first
@@ -568,6 +615,14 @@ def _sim_scan(
         age = age.at[bidx, target].set(
             jnp.where(place, 0.0, jnp.take_along_axis(age, target, axis=1))
         )
+        fid_c = fid_c.at[bidx, target].set(
+            jnp.where(
+                place, new_fid, jnp.take_along_axis(fid_c, target, axis=1)
+            )
+        )
+        hold = hold.at[bidx, target].set(
+            jnp.where(place, 0, jnp.take_along_axis(hold, target, axis=1))
+        )
         drops = drops + (new_live & ~place).sum(axis=1)
         admitted = admitted + place.sum(axis=1)
         cnew = jnp.take_along_axis(owner_pad, new_row, axis=1)  # (B, W_new)
@@ -576,11 +631,19 @@ def _sim_scan(
         )
 
         # ---- max-min waterfilling over path rows ------------------------- #
+        # Held flows (hold > 0: their path died and detection has not
+        # converged) blackhole at the first dead hop — they neither consume
+        # downstream capacity nor deliver, so they are excluded from the
+        # allocation entirely.  While hold == 0 everywhere (plain
+        # ``simulate``) ``flowing == active`` and every op below is
+        # bit-identical to the pre-event engine.
         active = row < P
+        held = active & (hold > 0)
+        flowing = active & ~held
         nflow = (
             jnp.zeros((B, P + 1), jnp.float32)
             .at[bidx, row]
-            .add(active.astype(jnp.float32))[:, :P]
+            .add(flowing.astype(jnp.float32))[:, :P]
         )
         rate_p, loads = _waterfill_core(loads_of, pe, nflow, cap, sval,
                                         wf_iters, slot_gather, rule=wf_rule)
@@ -591,10 +654,12 @@ def _sim_scan(
             [rate_p, jnp.zeros((B, 1), jnp.float32)], axis=1
         )
         r_f = jnp.take_along_axis(rate_pad, row, axis=1)  # (B, F)
-        delivered = jnp.minimum(rem, r_f * dt) * active
-        rem = rem - delivered
+        delivered = jnp.minimum(rem, r_f * dt) * flowing
+        bh = jnp.where(held, jnp.minimum(rem, bh_rate * dt), 0.0)
+        rem = rem - delivered - bh
         age = jnp.where(active, age + 1.0, age)
-        done = active & (rem <= 1e-6)
+        fin = active & (rem <= 1e-6)  # slot frees either way
+        done = fin & ~held  # only flows that finished delivering record FCT
         # JF005: _fold_sum, not jnp.sum — F is a padded axis (empty slots
         # contribute exact zeros) and the FCT sum must not depend on the
         # max_flows envelope the run happened to compile with.
@@ -613,62 +678,31 @@ def _sim_scan(
         # sums are invisible to JF005): F is a padded axis, so per-step
         # throughput folds positionally like fct_sum above.
         thr = _fold_sum(delivered)
-        nact = (active & ~done).sum(axis=1)  # in flight AFTER completions
-        row = jnp.where(done, P, row)
-        rem = jnp.where(done, 0.0, rem)
-        age = jnp.where(done, 0.0, age)
-        carry = (row, rem, age, next_id, rel, fct_hist, fct_sum, fct_cnt,
-                 comm_del, comm_off, util_sum, drops, admitted)
-        return carry, (thr, nact)
+        bh_step = _fold_sum(bh)
+        bh_sum = bh_sum + bh_step
+        nact = (active & ~fin).sum(axis=1)  # in flight AFTER completions
+        hold = jnp.where(fin, 0, jnp.maximum(hold - 1, 0))
+        row = jnp.where(fin, P, row)
+        rem = jnp.where(fin, 0.0, rem)
+        age = jnp.where(fin, 0.0, age)
+        carry = (row, rem, age, fid_c, hold, next_id, rel, fct_hist,
+                 fct_sum, fct_cnt, comm_del, comm_off, util_sum, drops,
+                 admitted, bh_sum)
+        return carry, (thr, nact, bh_step)
 
-    carry0 = (
-        jnp.full((B, F), P, jnp.int32),  # row: empty sentinel
-        jnp.zeros((B, F), jnp.float32),  # rem
-        jnp.zeros((B, F), jnp.float32),  # age
-        (jnp.arange(B, dtype=jnp.uint32) << 20),  # next_id: decorrelated
-        jnp.zeros((B, S), jnp.float32),  # rel_prev
-        jnp.zeros((B, nbins + 1), jnp.float32),  # fct_hist (+ garbage col)
-        jnp.zeros((B,), jnp.float32),  # fct_sum
-        jnp.zeros((B,), jnp.int32),  # fct_cnt
-        jnp.zeros((B, K + 1), jnp.float32),  # comm_del (+ dummy col)
-        jnp.zeros((B, K + 1), jnp.float32),  # comm_off (+ dummy col)
-        jnp.zeros((B, S), jnp.float32),  # util_sum
-        jnp.zeros((B,), jnp.int32),  # drops
-        jnp.zeros((B,), jnp.int32),  # admitted
-    )
-    xs = (jnp.arange(T, dtype=jnp.int32), rate_sched, epoch_sched)
-    carry, (thr, nact) = jax.lax.scan(step, carry0, xs)
-    return carry, thr, nact
+    xs = (ts, rate_sched, epoch_sched)
+    carry, (thr, nact, bh) = jax.lax.scan(step, carry0, xs)
+    return carry, thr, nact, bh
 
 
-def simulate(
-    systems: "PathSystemBatch | Sequence[PathSystem]",
-    workload,
-    policy: str = "ecmp",
-    config: SimConfig | None = None,
-    seed: int = 0,
-    backend: str = "auto",
-) -> SimResult:
-    """Run the batched flow-level simulator for one workload.
-
-    ``systems`` is a ``PathSystemBatch`` (or a sequence of ``PathSystem``s,
-    pad-and-stacked on the fly) — B independent instances advanced by ONE
-    jitted scan.  ``workload`` is a ``sim.workloads.Workload``; ``policy``
-    is one of ``POLICIES``.  ``backend`` selects the congestion backend for
-    the waterfilling inner loop (``auto``: gather tables on CPU, the fused
-    rank-3 kernel on TPU — the same dispatch as the batched MW solver).
-    """
-    cfg = config or SimConfig()
-    if policy not in POLICIES:
-        raise ValueError(f"unknown sim policy {policy!r}: expected {POLICIES}")
-    batch = _as_batch(systems)
+def _scan_inputs(batch: PathSystemBatch, policy: str, cfg: SimConfig,
+                 backend: str) -> dict:
+    """Host-side per-segment setup shared by ``simulate`` and the segmented
+    driver (``repro.sim.events``): commodity tables, capacity arrays,
+    backend resolution, and the per-step admission-width check — everything
+    ``_sim_scan`` needs that depends only on the batch (not the workload or
+    the carry)."""
     B, P, S = batch.n_batch, batch.p_max, batch.s_max
-    T = int(workload.n_steps)
-    if T > SIM_MAX_STEPS:
-        raise ValueError(
-            f"workload has {T} steps > REPRO_SIM_MAX_STEPS={SIM_MAX_STEPS}; "
-            "raise the env cap or split the horizon"
-        )
     if B > SIM_MAX_BATCH:
         raise ValueError(
             f"batch has {B} instances > REPRO_SIM_MAX_BATCH={SIM_MAX_BATCH}; "
@@ -676,7 +710,6 @@ def simulate(
         )
     stacked = not batch.shared
     K = batch.demands.shape[1] - (1 if stacked else 0)
-
     rows_tab, rows_cnt, comm_src, comm_dst = _commodity_tables(batch, K)
     D = rows_tab.shape[-1]
     w_new = cfg.max_arrivals * D if policy == "mptcp" else cfg.max_arrivals
@@ -688,8 +721,31 @@ def simulate(
         )
     owner_pad = _owner_padded(batch, K)
     cap, inv, sval = _cap_arrays(batch)
+    backend = _resolve_backend(backend, P, S, n_batch=max(B, 2))
+    if backend == "gather" and batch.slot_gather is None:
+        backend = "scatter"
+    slot_tab = jnp.asarray(batch.slot_gather) if backend == "gather" else None
+    return {
+        "n_comm": K,
+        "pe": jnp.asarray(batch.path_edges),
+        "owner_pad": jnp.asarray(owner_pad),
+        "cap": cap,
+        "inv": inv,
+        "sval": sval,
+        "rows_tab": jnp.asarray(rows_tab),
+        "rows_cnt": jnp.asarray(rows_cnt),
+        "comm_src": jnp.asarray(comm_src),
+        "comm_dst": jnp.asarray(comm_dst),
+        "slot_tab": slot_tab,
+        "backend": backend,
+    }
 
-    # demand epochs -> commodity log-weights (-inf never sampled)
+
+def _epoch_logits(workload, batch: PathSystemBatch, n_comm: int, n_steps: int):
+    """Demand epochs -> ((E, B, K) commodity log-weights, (T,) epoch ids).
+
+    ``-inf`` marks commodities that must never be sampled (zero demand)."""
+    B, K, T = batch.n_batch, n_comm, n_steps
     de = workload.demand_epochs
     if de is None:
         de = np.asarray(batch.demands, np.float32)[None, :, :K]
@@ -713,42 +769,95 @@ def simulate(
     logits = np.where(
         de > 0, np.log(np.maximum(de, 1e-30)), -np.inf
     ).astype(np.float32)
+    return logits, eos
 
-    backend = _resolve_backend(backend, P, S, n_batch=max(B, 2))
-    if backend == "gather" and batch.slot_gather is None:
-        backend = "scatter"
-    slot_tab = jnp.asarray(batch.slot_gather) if backend == "gather" else None
-    size_params = np.asarray(
+
+def _run_segment(inp: dict, carry, ts, rates, eos, logits, size_params,
+                 cfg: SimConfig, policy: str, key):
+    """One ``_sim_scan`` invocation over the (absolute) step indices ``ts``.
+
+    The same ``key`` must be passed for every segment of a run: the scan
+    folds the ABSOLUTE step index into it, so splitting a horizon into
+    segments replays the identical per-step RNG streams — the CT-segment
+    parity contract (INVARIANTS.md)."""
+    return _sim_scan(
+        carry,
+        jnp.asarray(ts, dtype=jnp.int32),
+        inp["pe"],
+        inp["owner_pad"],
+        inp["cap"], inp["inv"], inp["sval"],
+        jnp.asarray(logits),
+        inp["rows_tab"],
+        inp["rows_cnt"],
+        inp["comm_src"],
+        inp["comm_dst"],
+        jnp.asarray(rates, dtype=jnp.float32),
+        jnp.asarray(eos, dtype=jnp.int32),
+        jnp.asarray(size_params),
+        jnp.float32(cfg.dt),
+        jnp.float32(cfg.bh_rate),
+        jnp.uint32(cfg.salt),
+        key,
+        inp["slot_tab"],
+        policy=policy,
+        wf_iters=cfg.wf_iters,
+        wf_rule=cfg.wf_rule,
+        n_arrivals=cfg.max_arrivals,
+        backend=inp["backend"],
+    )
+
+
+def _size_params(workload) -> np.ndarray:
+    return np.asarray(
         [workload.p_elephant, workload.size_mice, workload.size_elephant],
         np.float32,
     )
 
-    carry, thr, nact = _sim_scan(
-        jnp.asarray(batch.path_edges),
-        jnp.asarray(owner_pad),
-        cap, inv, sval,
-        jnp.asarray(logits),
-        jnp.asarray(rows_tab),
-        jnp.asarray(rows_cnt),
-        jnp.asarray(comm_src),
-        jnp.asarray(comm_dst),
-        jnp.asarray(workload.rate, dtype=jnp.float32),
-        jnp.asarray(eos),
-        jnp.asarray(size_params),
-        jnp.float32(cfg.dt),
-        jnp.uint32(cfg.salt),
-        jax.random.PRNGKey(seed),
-        slot_tab,
-        policy=policy,
-        wf_iters=cfg.wf_iters,
-        wf_rule=cfg.wf_rule,
-        n_flows=cfg.max_flows,
-        n_arrivals=cfg.max_arrivals,
-        nbins=cfg.nbins,
-        backend=backend,
+
+def simulate(
+    systems: "PathSystemBatch | Sequence[PathSystem]",
+    workload,
+    policy: str = "ecmp",
+    config: SimConfig | None = None,
+    seed: int = 0,
+    backend: str = "auto",
+) -> SimResult:
+    """Run the batched flow-level simulator for one workload.
+
+    ``systems`` is a ``PathSystemBatch`` (or a sequence of ``PathSystem``s,
+    pad-and-stacked on the fly) — B independent instances advanced by ONE
+    jitted scan.  ``workload`` is a ``sim.workloads.Workload``; ``policy``
+    is one of ``POLICIES``.  ``backend`` selects the congestion backend for
+    the waterfilling inner loop (``auto``: gather tables on CPU, the fused
+    rank-3 kernel on TPU — the same dispatch as the batched MW solver).
+
+    For a run with topology events (failures, repairs, expansions) injected
+    mid-traffic, see ``repro.sim.events.simulate_events`` — with an empty
+    schedule it reduces to exactly this function, bit for bit.
+    """
+    cfg = config or SimConfig()
+    if policy not in POLICIES:
+        raise ValueError(f"unknown sim policy {policy!r}: expected {POLICIES}")
+    batch = _as_batch(systems)
+    T = int(workload.n_steps)
+    if T > SIM_MAX_STEPS:
+        raise ValueError(
+            f"workload has {T} steps > REPRO_SIM_MAX_STEPS={SIM_MAX_STEPS}; "
+            "raise the env cap or split the horizon"
+        )
+    inp = _scan_inputs(batch, policy, cfg, backend)
+    logits, eos = _epoch_logits(workload, batch, inp["n_comm"], T)
+    carry0 = _init_carry(
+        batch.n_batch, cfg.max_flows, batch.p_max, batch.s_max,
+        inp["n_comm"], cfg.nbins,
     )
-    (_, _, _, _, _, fct_hist, fct_sum, fct_cnt, comm_del, comm_off,
-     util_sum, drops, admitted) = carry
+    carry, thr, nact, bh = _run_segment(
+        inp, carry0, np.arange(T, dtype=np.int32), workload.rate, eos,
+        logits, _size_params(workload), cfg, policy,
+        jax.random.PRNGKey(seed),
+    )
+    (_, rem_f, _, _, _, _, _, fct_hist, fct_sum, fct_cnt, comm_del, comm_off,
+     util_sum, drops, admitted, bh_sum) = carry
     result = SimResult(
         throughput=np.asarray(thr),
         active=np.asarray(nact),
@@ -760,12 +869,15 @@ def simulate(
         util_sum=np.asarray(util_sum),
         drops=np.asarray(drops),
         admitted=np.asarray(admitted),
+        blackholed=np.asarray(bh),
+        blackholed_total=np.asarray(bh_sum),
+        inflight=np.asarray(rem_f, np.float64).sum(axis=1),
         demands=np.asarray(batch.demands),
-        slot_valid=np.asarray(sval),
+        slot_valid=np.asarray(inp["sval"]),
         n_steps=T,
         dt=cfg.dt,
         policy=policy,
-        backend=backend,
+        backend=inp["backend"],
     )
     if checks_enabled():
         check_sim_state(result)
@@ -803,12 +915,15 @@ def _ir_cases_sim_scan():
     def make():
         (pe3, owner2, _, inv2, sval2, slot_gather, _, _, _) = _ir_batch_args()
         B, P = pe3.shape[0], pe3.shape[1]
+        S = inv2.shape[-1]
         K = int(owner2.max()) + 1
         D = slot_gather.shape[-1]
         T, E, F, A, nbins = 4, 2, 8, 2, 4
         owner_pad = np.concatenate(
             [owner2, np.full((B, 1), K, np.int32)], axis=1)
         args = (
+            _init_carry(B, F, P, S, K, nbins),
+            np.arange(T, dtype=np.int32),  # ts (absolute step indices)
             pe3, owner_pad,
             np.ones_like(inv2),  # cap (B, S)
             np.ones_like(inv2),  # inv
@@ -822,14 +937,14 @@ def _ir_cases_sim_scan():
             np.zeros(T, np.int32),  # epoch_sched
             np.array([0.1, 1.0, 10.0], np.float32),  # size_params
             np.float32(0.1),  # dt
+            np.float32(1.0),  # bh_rate
             np.uint32(7),  # salt
             jax.random.PRNGKey(0),
             jnp.asarray(slot_gather),
         )
         kwargs = {
             "policy": "ecmp", "wf_iters": 4, "wf_rule": "exact",
-            "n_flows": F, "n_arrivals": A, "nbins": nbins,
-            "backend": "gather",
+            "n_arrivals": A, "backend": "gather",
         }
         return args, kwargs
 

@@ -16,6 +16,10 @@ arrival rate, the flow-size mixture, and (optionally) a sequence of demand
   ``routing.update_path_system`` (the §4.2 machinery), tenant departures
   zero a random slice of demand; each event is one sim segment batched
   across topology seeds.
+* ``poisson_failure_schedule`` — an MTBF-driven failure (and optional
+  MTTR-driven repair) event schedule for ``sim.events.simulate_events``:
+  link failures arrive as a Poisson process, each optionally healed an
+  exponential repair time later.
 """
 
 from __future__ import annotations
@@ -36,6 +40,7 @@ from ..core.traffic import (
     union_commodities,
 )
 from .engine import SimConfig, SimResult, simulate
+from .events import Event
 
 __all__ = [
     "Workload",
@@ -43,6 +48,7 @@ __all__ = [
     "diurnal_wave",
     "elephant_mice",
     "permutation_churn",
+    "poisson_failure_schedule",
     "tenant_churn_segments",
     "run_tenant_churn",
 ]
@@ -216,6 +222,61 @@ def tenant_churn_segments(
             {"systems": list(systems), "demands": [s.copy() for s in scale]}
         )
     return segments
+
+
+def poisson_failure_schedule(
+    n_steps: int,
+    mtbf_steps: float,
+    mttr_steps: float | None = None,
+    n_links: int = 1,
+    start_step: int = 1,
+    seed: int = 0,
+) -> list[Event]:
+    """MTBF-driven random failure process for ``simulate_events``.
+
+    Link-failure events arrive as a Poisson process: the first failure
+    lands at ``start_step`` and subsequent inter-arrival gaps are
+    ``Exp(mtbf_steps)``, rounded up to whole steps.  Each failure removes ``n_links`` uniform-random links
+    (a fresh producer seed per event, drawn from ``seed``).  When
+    ``mttr_steps`` is set, each failure is paired with a ``heal_links``
+    event an ``Exp(mttr_steps)`` repair time later (dropped when the repair
+    falls past the horizon), so the schedule models the paper's §4.3
+    fail/repair churn.  Deterministic for a fixed ``seed``; the returned
+    list is stably sorted by step.
+    """
+    if mtbf_steps <= 0:
+        raise ValueError(f"mtbf_steps must be > 0, got {mtbf_steps}")
+    if mttr_steps is not None and mttr_steps <= 0:
+        raise ValueError(f"mttr_steps must be > 0, got {mttr_steps}")
+    rng = np.random.default_rng(seed)
+    events: list[Event] = []
+    t = float(start_step)
+    i = 0
+    while True:
+        t += float(rng.exponential(mtbf_steps)) if i else 0.0
+        step = int(np.ceil(t))
+        if step >= n_steps:
+            break
+        tag = f"f{i}"
+        events.append(
+            Event(
+                step=step,
+                kind="fail_links",
+                n_links=n_links,
+                seed=int(rng.integers(2**31 - 1)),
+                tag=tag,
+            )
+        )
+        if mttr_steps is not None:
+            heal = int(np.ceil(t + float(rng.exponential(mttr_steps))))
+            heal = max(heal, step + 1)
+            if heal < n_steps:
+                events.append(
+                    Event(step=heal, kind="heal_links", heal_of=tag)
+                )
+        i += 1
+    order = np.argsort([e.step for e in events], kind="stable")
+    return [events[j] for j in order]
 
 
 def run_tenant_churn(

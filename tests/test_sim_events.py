@@ -1,0 +1,415 @@
+"""Tests for ``repro.sim.events`` — live fault injection (paper §4.3).
+
+The three contracts of the segmented driver:
+
+* **CT-segment parity** — an empty schedule (even with forced segment
+  splits) is bit-identical to one unsegmented ``simulate`` call, every
+  ``SimResult`` field included;
+* **volume conservation** — across a fail -> heal -> expand chain,
+  offered == delivered + blackholed + in-flight per instance, with
+  migration records that account every disrupted flow;
+* **carry-migration integrity** — surviving flows keep their state
+  bit-exactly through an injective row map (``check_carry_migration``
+  rejects forged migrations).
+
+Plus the producers' validation surfaces (``fail_links`` / ``heal_links``
+parameter checks, schedule validation, ``REPRO_SIM_EVENT_*`` import-time
+validation) and the MTBF/MTTR schedule generator's determinism.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import ContractViolation, check_carry_migration
+from repro.core import build_path_system, jellyfish
+from repro.core.failures import fail_links, fail_switches, heal_links
+from repro.core.routing import update_path_system
+from repro.core.topology import edge_fingerprint
+from repro.core.traffic import (
+    permutation_commodities,
+    random_server_permutation,
+)
+from repro.sim import (
+    Event,
+    SimConfig,
+    event_summary,
+    poisson_failure_schedule,
+    simulate,
+    simulate_events,
+    steady_poisson,
+    validate_schedule,
+)
+from repro.core.flow import PathSystemBatch
+
+_SIM_FIELDS = (
+    "throughput", "active", "fct_hist", "fct_sum", "fct_count",
+    "comm_delivered", "comm_offered", "util_sum", "drops", "admitted",
+    "blackholed", "blackholed_total", "inflight", "demands", "slot_valid",
+)
+
+
+def _instances(n=2, n_sw=20, ports=8, net=5):
+    tops = [jellyfish(n_sw, ports, net, seed=s + 1) for s in range(n)]
+    comms = [
+        permutation_commodities(
+            t, random_server_permutation(t.n_servers, np.random.default_rng(s))
+        )
+        for s, t in enumerate(tops)
+    ]
+    return tops, comms
+
+
+def _cfg():
+    return SimConfig(max_flows=256, max_arrivals=8, wf_iters=6)
+
+
+def _assert_conserved(res):
+    off = res.comm_offered.sum(axis=1, dtype=np.float64)
+    dele = res.comm_delivered.sum(axis=1, dtype=np.float64)
+    err = np.abs(off - (dele + res.blackholed_total + res.inflight))
+    assert np.all(err <= 1e-3 * np.maximum(off, 1.0)), err
+
+
+# --------------------------------------------------------------------------- #
+# CT-segment parity
+# --------------------------------------------------------------------------- #
+
+
+def test_empty_schedule_bit_parity():
+    tops, comms = _instances()
+    systems = [build_path_system(t, c, k=4) for t, c in zip(tops, comms)]
+    wl = steady_poisson(32, 3.0)
+    base = simulate(
+        PathSystemBatch.from_systems(list(systems)), wl, policy="ecmp",
+        config=_cfg(), seed=7,
+    )
+    ev = simulate_events(
+        tops, comms, [], wl, systems=list(systems), policy="ecmp",
+        config=_cfg(), seed=7,
+    )
+    for f in _SIM_FIELDS:
+        a = np.asarray(getattr(base, f))
+        b = np.asarray(getattr(ev.result, f))
+        assert a.shape == b.shape and np.array_equal(a, b), f
+    assert ev.events == []
+    assert ev.boundaries == [0]
+
+
+def test_forced_split_bit_parity():
+    # REPRO_SIM_EVENT_MAX_SEG-style chunking with no events must pass the
+    # device carry through untouched: same bits as one unsegmented scan.
+    tops, comms = _instances()
+    systems = [build_path_system(t, c, k=4) for t, c in zip(tops, comms)]
+    wl = steady_poisson(32, 3.0)
+    base = simulate(
+        PathSystemBatch.from_systems(list(systems)), wl, policy="ecmp",
+        config=_cfg(), seed=7,
+    )
+    ev = simulate_events(
+        tops, comms, [], wl, systems=list(systems), policy="ecmp",
+        config=_cfg(), seed=7, max_seg=10,
+    )
+    assert ev.boundaries == [0, 10, 20, 30]
+    for f in _SIM_FIELDS:
+        a = np.asarray(getattr(base, f))
+        b = np.asarray(getattr(ev.result, f))
+        assert a.shape == b.shape and np.array_equal(a, b), f
+
+
+# --------------------------------------------------------------------------- #
+# conservation + migration across live events
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("policy", ["ecmp", "ksp_lc", "mptcp"])
+def test_fail_heal_expand_conservation(policy):
+    tops, comms = _instances()
+    wl = steady_poisson(40, 3.0)
+    sched = [
+        Event(step=12, kind="fail_links", n_links=4, seed=5, tag="f"),
+        Event(step=22, kind="heal_links", heal_of="f"),
+        Event(step=30, kind="expand", grow=1, seed=6),
+    ]
+    ev = simulate_events(
+        tops, comms, sched, wl, k=4, policy=policy, config=_cfg(), seed=7,
+    )
+    _assert_conserved(ev.result)
+    assert [r["step"] for r in ev.events] == [12, 22, 30]
+    B = len(tops)
+    for rec in ev.events:
+        # every previously-live flow is accounted: survived + disrupted
+        assert rec["disrupted"].shape == (B,)
+        assert np.all(rec["survived"] >= 0)
+        assert np.all(
+            rec["disrupted"] == rec["reselected"] + rec["killed"]
+        )
+    # detection lag blackholes some traffic at the failure
+    assert np.all(ev.result.blackholed_total >= 0)
+    assert ev.result.blackholed_total.sum() > 0
+    # final topologies carry the expansion
+    assert all(t.n_switches == 21 for t in ev.tops)
+    summ = event_summary(ev)
+    assert len(summ) == 3
+    assert summ[0]["kinds"] == ["fail_links"]
+    assert np.all(np.isfinite(summ[0]["throughput_retention"]))
+    assert np.all(summ[0]["blackholed_bytes"] >= 0)
+
+
+def test_lag_zero_blackholes_nothing_on_survivable_failure():
+    # With lag=0 a disrupted flow re-selects immediately; blackholed volume
+    # can only come from killed commodities, so on a mild failure where
+    # every commodity keeps a route nothing is blackholed.
+    tops, comms = _instances()
+    wl = steady_poisson(30, 3.0)
+    sched = [Event(step=10, kind="fail_links", n_links=2, seed=3)]
+    ev = simulate_events(
+        tops, comms, sched, wl, k=4, policy="ecmp", config=_cfg(), seed=7,
+        lag=0,
+    )
+    _assert_conserved(ev.result)
+    if all(int(r["killed"].sum()) == 0 for r in ev.events):
+        assert np.all(ev.result.blackholed_total == 0.0)
+    ev_lag = simulate_events(
+        tops, comms, sched, wl, k=4, policy="ecmp", config=_cfg(), seed=7,
+        lag=4,
+    )
+    _assert_conserved(ev_lag.result)
+    assert ev_lag.result.blackholed_total.sum() >= \
+        ev.result.blackholed_total.sum()
+
+
+def test_heal_inverts_fail_delta():
+    top = jellyfish(20, 8, 5, seed=3)
+    failed = fail_links(top, seed=11, n_links=4)
+    healed = heal_links(failed, failed.meta["edges_removed"])
+    assert edge_fingerprint(healed) == edge_fingerprint(top)
+    assert healed.meta["delta_kind"] == "heal_links"
+    assert healed.meta["edges_removed"] == []
+    assert sorted(healed.meta["edges_added"]) == sorted(
+        failed.meta["edges_removed"]
+    )
+    # the pure-addition delta certifies through update_path_system
+    comm = permutation_commodities(
+        top, random_server_permutation(top.n_servers, np.random.default_rng(0))
+    )
+    ps0 = build_path_system(top, comm, k=4)
+    ps1 = update_path_system(ps0, top, failed, comm)
+    ps2 = update_path_system(ps1, failed, healed, comm)
+    ref = build_path_system(healed, comm, k=4, cache=False)
+    assert ps2.n_paths == ref.n_paths
+    assert np.array_equal(
+        np.sort(np.asarray(ps2.path_len)), np.sort(np.asarray(ref.path_len))
+    )
+
+
+# --------------------------------------------------------------------------- #
+# carry-migration contract
+# --------------------------------------------------------------------------- #
+
+
+def _migration_fixture():
+    # one instance, 3 old rows -> 3 new rows; rows 0,2 survive, row 1 dies
+    row_o = np.array([[0, 1, 2, 4]], np.int32)  # slot 3 empty (p_old=4)
+    rem_o = np.array([[3.0, 2.0, 1.0, 0.0]], np.float32)
+    age_o = np.array([[5.0, 4.0, 3.0, 0.0]], np.float32)
+    fid_o = np.array([[7, 8, 9, 0]], np.uint32)
+    hold_o = np.zeros((1, 4), np.int32)
+    fwd = [np.array([1, -1, 0], np.int64)]
+    row_n = np.array([[1, 2, 0, 3]], np.int32)  # slot 1 re-selected (p_new=3)
+    rem_n = rem_o.copy()
+    age_n = age_o.copy()
+    fid_n = fid_o.copy()
+    hold_n = np.array([[0, 2, 0, 0]], np.int32)
+    return (row_o, row_n, rem_o, rem_n, age_o, age_n, fid_o, fid_n,
+            hold_o, hold_n, fwd)
+
+
+def test_carry_migration_contract_accepts_valid():
+    args = _migration_fixture()
+    check_carry_migration(*args, 4, 3, 2)
+
+
+def test_carry_migration_rejects_noninjective_map():
+    args = list(_migration_fixture())
+    args[10] = [np.array([1, 1, 0], np.int64)]  # two old rows -> new row 1
+    with pytest.raises(ContractViolation, match="injective"):
+        check_carry_migration(*args, 4, 3, 2)
+
+
+def test_carry_migration_rejects_mutated_survivor():
+    args = list(_migration_fixture())
+    rem_n = args[3].copy()
+    rem_n[0, 0] += 0.5  # survivor's remaining volume drifted
+    args[3] = rem_n
+    with pytest.raises(ContractViolation, match="bit-exactly"):
+        check_carry_migration(*args, 4, 3, 2)
+
+
+def test_carry_migration_rejects_hold_beyond_lag():
+    args = list(_migration_fixture())
+    hold_n = args[9].copy()
+    hold_n[0, 1] = 9  # re-selected flow held far past the lag
+    args[9] = hold_n
+    with pytest.raises(ContractViolation, match="hold"):
+        check_carry_migration(*args, 4, 3, 2)
+
+
+def test_carry_migration_rejects_materialized_flow():
+    args = list(_migration_fixture())
+    row_n = args[1].copy()
+    row_n[0, 3] = 0  # empty slot suddenly holds a flow
+    args[1] = row_n
+    with pytest.raises(ContractViolation, match="empty slot"):
+        check_carry_migration(*args, 4, 3, 2)
+
+
+# --------------------------------------------------------------------------- #
+# producer validation
+# --------------------------------------------------------------------------- #
+
+
+def test_fail_links_validates_inputs():
+    top = jellyfish(12, 6, 4, seed=0)
+    with pytest.raises(ValueError, match="fraction"):
+        fail_links(top, fraction=1.5)
+    with pytest.raises(ValueError, match="remaining"):
+        fail_links(top, n_links=top.n_edges + 1)
+    with pytest.raises(ValueError, match="remaining"):
+        fail_links(top, n_links=-2)
+    with pytest.raises(ValueError, match="fraction"):
+        fail_switches(top, fraction=-0.1)
+
+
+def test_heal_links_validates_inputs():
+    top = jellyfish(12, 6, 4, seed=0)
+    failed = fail_links(top, seed=1, n_links=2)
+    gone = failed.meta["edges_removed"]
+    with pytest.raises(ValueError, match="already"):
+        heal_links(failed, [tuple(failed.edges[0])])
+    with pytest.raises(ValueError, match="self-loop"):
+        heal_links(failed, [(3, 3)])
+    with pytest.raises(ValueError, match="duplicate"):
+        heal_links(failed, [gone[0], gone[0]])
+    with pytest.raises(ValueError, match="in \\["):
+        heal_links(failed, [(0, 99)])
+    # degree budget: adding a new link to a fully-wired topology must fail
+    have = {tuple(e) for e in top.edges.tolist()}
+    extra = next(
+        (u, v)
+        for u in range(top.n_switches)
+        for v in range(u + 1, top.n_switches)
+        if (u, v) not in have
+    )
+    with pytest.raises(ValueError, match="net_degree"):
+        heal_links(top, [extra])  # original top has no free ports
+
+
+def test_validate_schedule_errors():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        validate_schedule([Event(step=1, kind="meteor")], 10)
+    with pytest.raises(ValueError, match="outside"):
+        validate_schedule(
+            [Event(step=10, kind="fail_links", n_links=1)], 10
+        )
+    with pytest.raises(ValueError, match="n_links or fraction"):
+        validate_schedule([Event(step=1, kind="fail_links")], 10)
+    with pytest.raises(ValueError, match="grow"):
+        validate_schedule([Event(step=1, kind="expand")], 10)
+    with pytest.raises(ValueError, match="heal_of"):
+        validate_schedule([Event(step=1, kind="heal_links")], 10)
+    with pytest.raises(ValueError, match="does not name"):
+        validate_schedule(
+            [Event(step=1, kind="heal_links", heal_of="nope")], 10
+        )
+    with pytest.raises(ValueError, match="does not name"):
+        validate_schedule(
+            [
+                Event(step=5, kind="fail_links", n_links=1, tag="f"),
+                Event(step=2, kind="heal_links", heal_of="f"),
+            ],
+            10,
+        )
+    with pytest.raises(ValueError, match="duplicate tag"):
+        validate_schedule(
+            [
+                Event(step=1, kind="fail_links", n_links=1, tag="f"),
+                Event(step=2, kind="fail_links", n_links=1, tag="f"),
+            ],
+            10,
+        )
+    validate_schedule(
+        [
+            Event(step=1, kind="fail_links", n_links=1, tag="f"),
+            Event(step=3, kind="heal_links", heal_of="f"),
+            Event(step=4, kind="expand", grow=2),
+        ],
+        10,
+    )
+
+
+def test_simulate_events_rejects_epoch_workloads():
+    tops, comms = _instances(1)
+    wl = steady_poisson(8, 1.0)
+    wl.demand_epochs = np.ones((1, 4), np.float32)
+    wl.epoch_of_step = np.zeros(8, np.int32)
+    with pytest.raises(ValueError, match="demand-epoch"):
+        simulate_events(tops, comms, [], wl, k=4)
+
+
+# --------------------------------------------------------------------------- #
+# MTBF/MTTR schedule generator
+# --------------------------------------------------------------------------- #
+
+
+def test_poisson_failure_schedule_deterministic():
+    a = poisson_failure_schedule(200, mtbf_steps=12.0, mttr_steps=6.0, seed=4)
+    b = poisson_failure_schedule(200, mtbf_steps=12.0, mttr_steps=6.0, seed=4)
+    assert a == b
+    c = poisson_failure_schedule(200, mtbf_steps=12.0, mttr_steps=6.0, seed=5)
+    assert a != c
+    validate_schedule(a, 200)
+    steps = [e.step for e in a]
+    assert steps == sorted(steps)
+    fails = [e for e in a if e.kind == "fail_links"]
+    assert fails and fails[0].step == 1
+    heals = {e.heal_of: e.step for e in a if e.kind == "heal_links"}
+    fail_steps = {e.tag: e.step for e in fails}
+    for tag, hs in heals.items():
+        assert hs > fail_steps[tag]
+    # every heal pairs with exactly one failure; unmatched heals never occur
+    assert set(heals) <= set(fail_steps)
+
+
+def test_poisson_failure_schedule_validates():
+    with pytest.raises(ValueError, match="mtbf"):
+        poisson_failure_schedule(100, mtbf_steps=0.0)
+    with pytest.raises(ValueError, match="mttr"):
+        poisson_failure_schedule(100, mtbf_steps=5.0, mttr_steps=-1.0)
+    assert poisson_failure_schedule(0, mtbf_steps=5.0) == []
+
+
+# --------------------------------------------------------------------------- #
+# REPRO_SIM_EVENT_* env validation (import-time, subprocess)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("var", ["REPRO_SIM_EVENT_LAG",
+                                 "REPRO_SIM_EVENT_MAX_SEG"])
+def test_event_env_validated_at_import(var):
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for bad in ("soon", "-3", "1.5"):
+        env = dict(os.environ, **{var: bad})
+        env["PYTHONPATH"] = str(root / "src")
+        proc = subprocess.run(
+            [sys.executable, "-c", "import repro.sim"],
+            env=env, capture_output=True, text=True, cwd=str(root),
+        )
+        assert proc.returncode != 0, (var, bad)
+        assert var in proc.stderr, (var, bad)

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 
 import numpy as np
 
@@ -23,6 +22,7 @@ from repro.core import (
 )
 from repro import env
 from repro.core.flow import LP_PATH_LIMIT
+from repro.obs.bench import Timer  # noqa: F401 — the one shared bench timer
 
 ART = pathlib.Path(env.read("REPRO_BENCH_OUT"))
 FULL = env.read("REPRO_BENCH_FULL")  # bigger sizes
@@ -275,15 +275,6 @@ def max_servers_at_full_capacity(
         return verdicts
 
     return speculative_max_feasible(lo, hi, ok_batch, levels=wave_levels)
-
-
-class Timer:
-    def __enter__(self):
-        self.t0 = time.perf_counter()
-        return self
-
-    def __exit__(self, *a):
-        self.dt = time.perf_counter() - self.t0
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

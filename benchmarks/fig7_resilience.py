@@ -243,6 +243,19 @@ def run_time_domain() -> list[str]:
         random_server_permutation,
     )
 
+    def _jsonable_summary(summ):
+        # event_summary rows carry per-instance numpy arrays (with NaN for
+        # undefined retention/FCT); JSON has no NaN, so those become null
+        def clean(v):
+            if isinstance(v, np.ndarray):
+                return [
+                    None if (isinstance(x, float) and np.isnan(x)) else x
+                    for x in v.astype(np.float64).tolist()
+                ]
+            return v
+
+        return [{k: clean(v) for k, v in s.items()} for s in summ]
+
     n_sw, steps, n_inst = (40, 240, 3) if FULL else (22, 120, 2)
     mtbfs = (60.0, 30.0, 15.0) if FULL else (40.0, 15.0)
     k = 4
@@ -262,6 +275,7 @@ def run_time_domain() -> list[str]:
     )
     base_thr = float(base.throughput[steps // 2:].mean())
     out, rows = [], []
+    event_rows: dict[str, list] = {}
     lag_used = None
     with Timer() as t_all:
         for mtbf in mtbfs:
@@ -283,6 +297,7 @@ def run_time_domain() -> list[str]:
                 f"conservation violated at mtbf={mtbf}: {err}"
             )
             summ = event_summary(ev)
+            event_rows[f"mtbf{int(mtbf):03d}"] = _jsonable_summary(summ)
             rets = np.concatenate(
                 [s["throughput_retention"] for s in summ]
             ) if summ else np.array([1.0])
@@ -309,6 +324,11 @@ def run_time_domain() -> list[str]:
             ))
     save("fig7_time_domain", {
         "rows": rows,
+        # per-boundary telemetry, persisted — not just asserted in-bench:
+        # one serialized event_summary row per failure/repair boundary
+        # (throughput retention, blackholed bytes, migration counts, FCT
+        # before/after), keyed by MTBF level
+        "telemetry": {"event_summary": event_rows},
         "baseline_steady_throughput": base_thr,
         "policy": "ecmp",
         "lag_steps": lag_used,

@@ -8,10 +8,6 @@ tiny interpret-mode validation timing."""
 
 from __future__ import annotations
 
-import resource
-import time
-import tracemalloc
-
 import numpy as np
 
 import jax
@@ -41,6 +37,13 @@ from repro.core import fattree_equipment, max_feasible, mw_concurrent_flow_batch
 from repro.core.flow import _fold_sum, _path_cost_gather
 from repro.core.routing import _k_shortest_paths_dfs, clear_routing_cache
 from repro.kernels import ops
+from repro import obs
+
+# the shared obs.bench measurement helpers (one schema across the figN
+# benches); the leading-underscore aliases predate the obs layer
+from repro.obs.bench import ru_maxrss_mb as _ru_maxrss_mb
+from repro.obs.bench import timed as _time
+from repro.obs.bench import timed_peak as _timed_peak
 
 from .common import (
     FULL,
@@ -52,40 +55,6 @@ from .common import (
     max_servers_at_full_capacity,
     save,
 )
-
-
-def _time(fn, warmup=1, iters=3):
-    for _ in range(warmup):
-        fn()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn()
-    return (time.perf_counter() - t0) / iters
-
-
-def _ru_maxrss_mb() -> float:
-    """Process peak RSS in MiB (ru_maxrss is KiB on Linux)."""
-    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
-
-
-def _timed_peak(fn):
-    """(result, seconds, tracemalloc-peak-bytes) over two calls of ``fn``.
-
-    Time and peak are measured in SEPARATE calls: tracemalloc hooks every
-    allocation and inflates numpy-heavy wall clock by 1.3-2x, which would
-    make these rows apples-to-oranges against the ``_time()``-measured rows
-    in this file.  tracemalloc sees numpy's array allocations, so the peak
-    is the per-call high water of the *distance state + temporaries* —
-    unlike ru_maxrss, which is a process-lifetime mark and never goes down.
-    """
-    t0 = time.perf_counter()
-    out = fn()
-    dt = time.perf_counter() - t0
-    tracemalloc.start()
-    fn()
-    _, peak = tracemalloc.get_traced_memory()
-    tracemalloc.stop()
-    return out, dt, peak
 
 
 def _delta_routing_chain(n0: int, k_ports: int, r_net: int, steps: int,
@@ -697,6 +666,29 @@ def run() -> list[str]:
     results_mw_adaptive = {
         "fixed_s": t_mw, "adaptive_s": t_mwa, "iters_used": int(mwa.iters),
         "alpha_fixed": float(mw.alpha), "alpha_adaptive": float(mwa.alpha),
+    }
+    # tracing inertness + overhead: the same adaptive solve with the obs
+    # span tracer live must return the identical alpha (spans sit only at
+    # host boundaries — INVARIANTS.md OB-1) at <5% extra wall-clock
+    prev_tr = obs.set_trace(True)
+    mwt = mw_concurrent_flow(ps, iters=400, early_stop=True, target_alpha=1.0)
+    t_mwt = _time(
+        lambda: mw_concurrent_flow(ps, iters=400, early_stop=True,
+                                   target_alpha=1.0),
+        warmup=0, iters=2,
+    )
+    obs.set_trace(prev_tr)
+    overhead = t_mwt / max(t_mwa, 1e-12) - 1.0
+    out.append(
+        csv_row(
+            "obs_trace_overhead", t_mwt * 1e6,
+            f"overhead={overhead*100:+.1f}% "
+            f"alpha_match={mwt.alpha == mwa.alpha}",
+        )
+    )
+    results["obs_trace_overhead"] = {
+        "untraced_s": t_mwa, "traced_s": t_mwt, "overhead": overhead,
+        "alpha_match": bool(mwt.alpha == mwa.alpha),
     }
     out.append(csv_row("mptcp_1500it_512", t_mp * 1e6, ""))
 

@@ -5,13 +5,24 @@
     PYTHONPATH=src python -m benchmarks.run fig1 fig7  # subset
     REPRO_BENCH_FULL=1 ... run                         # paper-scale sizes
 
-Artifacts land in artifacts/bench/*.json (consumed by EXPERIMENTS.md)."""
+Artifacts land in artifacts/bench/*.json (consumed by EXPERIMENTS.md).
+
+Every run also appends one row to ``BENCH_OBS.json`` (repo root): per-bench
+wall seconds, process peak RSS, and XLA compile counts — the persistent
+perf trajectory across PRs.  With ``REPRO_TRACE=1`` the whole run is
+spanned per bench and the trace exports to ``{REPRO_TRACE_OUT}/`` as both
+JSONL and a Perfetto-loadable Chrome trace."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+from repro import obs
+from repro.analysis.retrace import install_compile_listener
 
 MODULES = [
     ("fig1", "benchmarks.fig1_capacity"),
@@ -31,24 +42,61 @@ MODULES = [
     ("kernels", "benchmarks.kernels_bench"),
 ]
 
+#: The accreting perf-trajectory file — one JSON list, one row per run.
+TRAJECTORY = pathlib.Path("BENCH_OBS.json")
+
+
+def append_trajectory(benches: dict, failures: int) -> None:
+    from benchmarks.common import FULL, SMOKE
+
+    rows = []
+    if TRAJECTORY.exists():
+        try:
+            rows = json.loads(TRAJECTORY.read_text())
+        except json.JSONDecodeError:
+            rows = []  # never let a corrupt trajectory kill a bench run
+        if not isinstance(rows, list):
+            rows = []
+    rows.append(
+        {
+            "unix_time": time.time(),
+            "mode": "smoke" if SMOKE else ("full" if FULL else "default"),
+            "failures": failures,
+            "metrics": obs.snapshot(),
+            "benches": benches,
+        }
+    )
+    TRAJECTORY.write_text(json.dumps(rows, indent=1))
+
 
 def main() -> None:
     want = set(sys.argv[1:])
+    install_compile_listener()  # compile events -> obs bus for every bench
     print("name,us_per_call,derived")
     failures = 0
+    benches: dict[str, dict] = {}
     for tag, modname in MODULES:
         if want and tag not in want:
             continue
         t0 = time.time()
         try:
-            mod = __import__(modname, fromlist=["run"])
-            for line in mod.run():
-                print(line, flush=True)
-            print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+            with obs.count_compiles() as cc, obs.span(f"bench/{tag}"):
+                mod = __import__(modname, fromlist=["run"])
+                for line in mod.run():
+                    print(line, flush=True)
+            dt = time.time() - t0
+            benches[tag] = obs.perf_record(tag, dt, compiles=cc.count)
+            print(f"# {tag} done in {dt:.1f}s", flush=True)
         except Exception:
             failures += 1
             print(f"# {tag} FAILED:", flush=True)
             traceback.print_exc()
+    append_trajectory(benches, failures)
+    print(f"# trajectory row appended to {TRAJECTORY}", flush=True)
+    if obs.trace_enabled():
+        jsonl = obs.write_jsonl()
+        chrome = obs.write_chrome_trace()
+        print(f"# trace artifacts: {jsonl} {chrome}", flush=True)
     if failures:
         raise SystemExit(1)
 

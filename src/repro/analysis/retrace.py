@@ -21,6 +21,16 @@ Two independent instruments (both cheap enough for tier-1 tests):
     regardless of which jit (or host library) triggered them, so it also
     catches caches the registry doesn't know about.
 
+Since the ``repro.obs`` layer landed, the single process-wide
+``jax.monitoring`` listener (there is no unregister API, so exactly one
+is ever registered) publishes onto the obs event bus as
+``xla/backend_compile`` instead of fanning out to a module-private
+counter list.  ``track_compiles()`` is now just a bus subscriber, which
+means every other obs consumer gets compile events for free: the metric
+``event/xla/backend_compile`` accretes in ``obs.snapshot()``, and traced
+runs show each compile as an instant on the Perfetto timeline exactly
+where it stalled the sweep.
+
 This module imports jax, so it is NOT pulled in by the pure-stdlib lint
 CLI; ``repro.analysis`` exposes it lazily.
 """
@@ -32,8 +42,11 @@ import threading
 
 import jax
 
+from ..obs import metrics as _metrics
+
 __all__ = [
     "CompileCounter",
+    "install_compile_listener",
     "named_solver_jits",
     "solver_cache_sizes",
     "track_compiles",
@@ -87,9 +100,9 @@ class CompileCounter:
         self.events.append(event)
 
 
-# jax.monitoring has no unregister API for a single listener, so one
-# process-wide listener fans out to whatever counters are currently live.
-_live_counters: list[CompileCounter] = []
+# jax.monitoring has no unregister API for a single listener, so exactly one
+# process-wide listener is registered; it forwards onto the obs event bus
+# and counters subscribe/unsubscribe there.
 _lock = threading.Lock()
 _registered = False
 
@@ -97,12 +110,17 @@ _registered = False
 def _listener(event: str, duration: float, **kwargs) -> None:
     if "backend_compile" not in event:
         return
-    with _lock:
-        for counter in _live_counters:
-            counter._record(event)
+    _metrics.emit("xla/backend_compile", event=event,
+                  duration_s=float(duration))
 
 
-def _ensure_listener() -> None:
+def install_compile_listener() -> None:
+    """Register the (single) jax.monitoring -> obs-bus forwarder.
+
+    Idempotent.  ``track_compiles()`` calls this lazily; benchmark drivers
+    call it up front so compile events flow into the obs metrics/trace even
+    outside a ``track_compiles`` block.
+    """
     global _registered
     with _lock:
         if not _registered:
@@ -122,12 +140,15 @@ def track_compiles():
     Counts are process-wide (any thread, any jit), which is the point — a
     retrace hiding behind a helper the registry doesn't list still shows up.
     """
-    _ensure_listener()
+    install_compile_listener()
     counter = CompileCounter()
-    with _lock:
-        _live_counters.append(counter)
+
+    def _on_event(name: str, **attrs) -> None:
+        if name == "xla/backend_compile":
+            counter._record(attrs.get("event", name))
+
+    _metrics.subscribe(_on_event)
     try:
         yield counter
     finally:
-        with _lock:
-            _live_counters.remove(counter)
+        _metrics.unsubscribe(_on_event)

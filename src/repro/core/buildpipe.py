@@ -45,10 +45,12 @@ the parity tests compare against.
 
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterable, Iterator, TypeVar
 
 from .. import env
+from .. import obs
 
 __all__ = ["pipeline_enabled", "set_build_pipeline", "stream_builds"]
 
@@ -96,16 +98,39 @@ def stream_builds(
     worker drains it, matching sequential semantics).
     """
     if not pipeline_enabled(enabled):
-        for thunk in thunks:
-            yield thunk()
+        for i, thunk in enumerate(thunks):
+            with obs.span("build/serial", idx=i):
+                result = thunk()
+            yield result
         return
+
+    def run(thunk: Callable[[], T], idx: int) -> tuple[T, float]:
+        # executes on the single worker thread — the span carries that
+        # thread's id, so Perfetto shows builds as their own lane
+        with obs.span("build/prefetch", idx=idx):
+            t0 = time.perf_counter()
+            out = thunk()
+            return out, time.perf_counter() - t0
+
+    def drain(fut) -> T:
+        t0 = time.perf_counter()
+        out, build_s = fut.result()
+        stall_s = time.perf_counter() - t0
+        # stall: consumer time blocked waiting on the worker; overlap:
+        # build time hidden behind the consumer's own (device) work
+        obs.counter("pipeline/builds").inc()
+        obs.counter("pipeline/stall_s").inc(stall_s)
+        obs.counter("pipeline/overlap_s").inc(max(build_s - stall_s, 0.0))
+        obs.hist("pipeline/stall_s_hist").observe(stall_s)
+        return out
+
     it = iter(thunks)
     with ThreadPoolExecutor(max_workers=1) as pool:
         pending = None
-        for thunk in it:
-            fut = pool.submit(thunk)
+        for i, thunk in enumerate(it):
+            fut = pool.submit(run, thunk, i)
             if pending is not None:
-                yield pending.result()
+                yield drain(pending)
             pending = fut
         if pending is not None:
-            yield pending.result()
+            yield drain(pending)

@@ -95,6 +95,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import env
+from .. import obs
 from ..analysis.contracts import check_path_system_batch, checks_enabled
 from ..analysis.registry import AuditCase, solver_jit
 from .routing import PathSystem
@@ -730,29 +731,40 @@ def mw_concurrent_flow(
         done = 0
         best_prev = 0.0
         stall = 0
+        stop_reason = "budget"
         while done < iters:
             # always trace the same static window length; a short final
             # window runs `step` live iterations and check_every - step
             # masked no-ops, so one compilation serves the whole solve
             step = min(check_every, iters - done)
-            carry = _mw_window(pe, owner, demands, inv_cap, carry, done, step,
-                               iters, check_every, backend)
-            done += step
-            best = float(carry[2])  # best alpha so far (exact evaluations)
+            with obs.span("mw/window", t0=done, step=step):
+                carry = _mw_window(pe, owner, demands, inv_cap, carry, done,
+                                   step, iters, check_every, backend)
+                done += step
+                best = float(carry[2])  # best alpha so far (exact evals)
+            obs.counter("mw/windows").inc()
+            obs.counter_event("mw/alpha", best)
             if target_alpha is not None and best >= target_alpha:
+                stop_reason = "target"
                 break
             if early_stop:
                 if best - best_prev < rel_tol * max(best, 1e-12):
                     stall += 1
                     if stall >= patience:
+                        stop_reason = "plateau"
                         break
                 else:
                     stall = 0
                 best_prev = max(best, best_prev)
+        obs.counter(f"mw/stop/{stop_reason}").inc()
     alpha, rates, max_load = _mw_final(pe, owner, demands, inv_cap, carry, backend)
-    return FlowResult(
+    res = FlowResult(
         float(alpha), np.asarray(rates), float(max_load), f"mw-{backend}", done
     )
+    obs.counter("mw/solves").inc()
+    obs.counter("mw/iters").inc(done)
+    obs.gauge("mw/alpha").set(res.alpha)
+    return res
 
 
 # --------------------------------------------------------------------------- #
@@ -1233,29 +1245,39 @@ def mw_concurrent_flow_batch(
         t0 = 0
         while t0 < iters and active.any():
             step = min(check_every, iters - t0)
-            carry = _mw_window_batch(
-                pe, owner, demands, inv_cap, slot_valid, carry, t0, step,
-                jnp.asarray(active), iters, check_every, backend, slot_tab,
-                owner_tab,
-            )
-            t0 += step
-            done[active] += step
-            best = np.asarray(carry[2])
+            with obs.span("mw/window_batch", t0=t0, step=step,
+                          active=int(active.sum())):
+                carry = _mw_window_batch(
+                    pe, owner, demands, inv_cap, slot_valid, carry, t0, step,
+                    jnp.asarray(active), iters, check_every, backend,
+                    slot_tab, owner_tab,
+                )
+                t0 += step
+                done[active] += step
+                best = np.asarray(carry[2])
+            obs.counter("mw/windows_batch").inc()
+            if obs.trace_enabled():
+                obs.counter_event("mw/alpha_batch_mean",
+                                  float(best[active].mean()))
             for b in np.flatnonzero(active):
                 # identical decision sequence to mw_concurrent_flow's
                 # window loop, applied per instance
                 if target_alpha is not None and best[b] >= target_alpha:
                     active[b] = False
+                    obs.counter("mw/stop/target").inc()
                     continue
                 if early_stop:
                     if best[b] - best_prev[b] < rel_tol * max(best[b], 1e-12):
                         stall[b] += 1
                         if stall[b] >= patience:
                             active[b] = False
+                            obs.counter("mw/stop/plateau").inc()
                             continue
                     else:
                         stall[b] = 0
                     best_prev[b] = max(best[b], best_prev[b])
+        if active.any():
+            obs.counter("mw/stop/budget").inc(int(active.sum()))
     alpha, rates, max_load = _mw_final_batch(
         pe, owner, demands, inv_cap, carry, backend, slot_tab
     )

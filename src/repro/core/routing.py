@@ -85,6 +85,7 @@ from collections import OrderedDict
 import numpy as np
 
 from .. import env
+from .. import obs
 from ..analysis.contracts import (
     check_built_batch,
     check_path_system,
@@ -852,18 +853,23 @@ def _k_shortest_unique(
             buckets = [(True, active[lo]), (False, active[~lo])]
         for lo_slack, sel in buckets:
             for sh in _shard_by_dst(sel, dst, rows_cap, pairs_cap, blocks):
-                rows = np.unique(dst[sh])  # sorted — searchsorted below
-                nbr_sh, tile, src_sh, dst_sh = ctx_of(rows, src[sh], dst[sh])
-                dst_row = np.searchsorted(rows, dst[sh])
-                found = _batched_round(
-                    nbr_sh, tile, src_sh, dst_sh, dst_row,
-                    base[sh] + slack[sh], k, max_enum,
-                    check_simple=not lo_slack,
-                )
-                for j, q in enumerate(sh):
-                    results[q] = found[j]
-                    if len(found[j]) < k and slack[q] < max_slack:
-                        still.append(q)
+                obs.counter("build/shards").inc()
+                with obs.span("build/shard", pairs=len(sh),
+                              lo_slack=bool(lo_slack)):
+                    rows = np.unique(dst[sh])  # sorted — searchsorted below
+                    nbr_sh, tile, src_sh, dst_sh = ctx_of(
+                        rows, src[sh], dst[sh]
+                    )
+                    dst_row = np.searchsorted(rows, dst[sh])
+                    found = _batched_round(
+                        nbr_sh, tile, src_sh, dst_sh, dst_row,
+                        base[sh] + slack[sh], k, max_enum,
+                        check_simple=not lo_slack,
+                    )
+                    for j, q in enumerate(sh):
+                        results[q] = found[j]
+                        if len(found[j]) < k and slack[q] < max_slack:
+                            still.append(q)
         active = np.asarray(sorted(still), dtype=np.int64)
         slack[active] += 1
     return results
@@ -1620,6 +1626,7 @@ def update_path_system(
     ms = ps.max_slack if max_slack is None else max_slack
 
     def rebuild() -> PathSystem:
+        obs.counter("route/update/rebuilds").inc()
         return build_path_system(
             top_new, comm, k=kk, max_slack=ms, cache=cache,
             keep_node_paths=keep_node_paths,
@@ -1776,16 +1783,17 @@ def update_path_system(
     # ---- re-enumerate the rest ------------------------------------------ #
     enum_js = np.flatnonzero(~reuse)
     pairs = [(int(src_n[j]), int(dst_n[j])) for j in enum_js]
-    if cache:
-        enum_paths = k_shortest_paths(
-            top_new, pairs, k=kk, max_slack=ms, cache=True,
-            use_counts="subset",
-        )
-    else:
-        enum_paths = k_shortest_paths(
-            top_new, pairs, k=kk, max_slack=ms, dist=dist_new, cache=False,
-            use_counts="subset",
-        )
+    with obs.span("build/enum_delta", pairs=len(pairs)):
+        if cache:
+            enum_paths = k_shortest_paths(
+                top_new, pairs, k=kk, max_slack=ms, cache=True,
+                use_counts="subset",
+            )
+        else:
+            enum_paths = k_shortest_paths(
+                top_new, pairs, k=kk, max_slack=ms, dist=dist_new,
+                cache=False, use_counts="subset",
+            )
     pe_e, len_e, owner_e, kept_e = _paths_to_slots(top_new, entry_new, enum_paths)
 
     # ---- splice (vectorized) --------------------------------------------- #
@@ -1812,6 +1820,18 @@ def update_path_system(
         np.searchsorted(owner_e, np.arange(int(kept_e) + 1))
     )
     unrouted_new = stat == 0
+    # delta telemetry: how much of the update was splice vs re-enumeration
+    obs.counter("route/update/deltas").inc()
+    obs.counter("route/update/spliced").inc(int((stat == 1).sum()))
+    obs.counter("route/update/enumerated").inc(len(enum_js))
+    obs.counter("route/update/unrouted").inc(int(unrouted_new.sum()))
+    obs.instant(
+        "route/update",
+        commodities=K,
+        spliced=int((stat == 1).sum()),
+        enumerated=len(enum_js),
+        unrouted=int(unrouted_new.sum()),
+    )
 
     kept_js = np.flatnonzero(stat > 0)
     counts = cnt_j[kept_js]

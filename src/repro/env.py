@@ -185,6 +185,21 @@ SPECS: dict[str, EnvSpec] = {
             "(repro.analysis.contracts) at solver boundaries.",
         ),
         EnvSpec(
+            "REPRO_TRACE",
+            _parse_flag,
+            False,
+            "Enable the repro.obs span tracer (host-boundary spans + "
+            "instant events; JSONL / Chrome-trace sinks).  Disabled, every "
+            "obs.span() call is a shared no-op.",
+        ),
+        EnvSpec(
+            "REPRO_TRACE_OUT",
+            _parse_str,
+            "artifacts/obs",
+            "Output directory for repro.obs trace artifacts "
+            "(JSONL span logs + Chrome-trace/Perfetto exports).",
+        ),
+        EnvSpec(
             "REPRO_BENCH_OUT",
             _parse_str,
             "artifacts/bench",

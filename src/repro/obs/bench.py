@@ -1,0 +1,128 @@
+"""Shared benchmark measurement helpers — ONE timing/memory schema.
+
+Before `repro.obs`, every benchmark module hand-rolled its own
+instrumentation: ``kernels_bench`` had ``_time``/``_timed_peak``/
+``_ru_maxrss_mb``, ``benchmarks/common.py`` had a bare ``perf_counter``
+``Timer``, and their rows reported whichever subset the author
+remembered.  These are the single copies; every figN driver imports from
+here so rows share the ``perf_record`` schema (wall seconds, tracemalloc
+peak, ru_maxrss, compile count) and ``benchmarks/run.py`` can fold them
+into the ``BENCH_OBS.json`` trajectory.
+
+Measurement discipline (inherited from the kernels bench, kept verbatim):
+time and tracemalloc peak come from SEPARATE calls — tracemalloc hooks
+every allocation and inflates numpy-heavy wall clock by 1.3-2x, which
+would make rows apples-to-oranges against plain timings.  ``ru_maxrss``
+is a process-lifetime high-water mark (never goes down); the tracemalloc
+peak is the per-call high water of the arrays + temporaries.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import resource
+import time
+import tracemalloc
+
+from . import metrics as _metrics
+
+__all__ = [
+    "Timer",
+    "count_compiles",
+    "perf_record",
+    "ru_maxrss_mb",
+    "timed",
+    "timed_peak",
+]
+
+
+class Timer:
+    """``with Timer() as t: ...`` — elapsed ``perf_counter`` in ``t.dt``."""
+
+    def __enter__(self) -> "Timer":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a) -> None:
+        self.dt = time.perf_counter() - self.t0
+
+
+def ru_maxrss_mb() -> float:
+    """Process peak RSS in MiB (ru_maxrss is KiB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def timed(fn, warmup: int = 1, iters: int = 3) -> float:
+    """Mean wall seconds per call over ``iters`` calls after ``warmup``."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def timed_peak(fn):
+    """(result, seconds, tracemalloc-peak-bytes) over two calls of ``fn``.
+
+    Time and peak are measured in SEPARATE calls (see module docstring);
+    the peak is the second call's high-water mark of traced allocations.
+    """
+    t0 = time.perf_counter()
+    out = fn()
+    dt = time.perf_counter() - t0
+    tracemalloc.start()
+    fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, dt, peak
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Count XLA ``backend_compile`` events via the obs bus.
+
+    Pure-stdlib subscriber: events only flow once something registered the
+    ``jax.monitoring`` forwarder (``repro.analysis.retrace`` does on first
+    ``track_compiles()``; ``benchmarks/run.py`` installs it up front).
+    Yields an object whose ``count`` is live.
+    """
+
+    class _C:
+        count = 0
+
+    c = _C()
+
+    def on_event(name: str, **attrs) -> None:
+        if name == "xla/backend_compile":
+            c.count += 1
+
+    _metrics.subscribe(on_event)
+    try:
+        yield c
+    finally:
+        _metrics.unsubscribe(on_event)
+
+
+def perf_record(name: str, seconds: float, *,
+                tracemalloc_peak_bytes: int | None = None,
+                compiles: int | None = None,
+                **extra) -> dict:
+    """The one benchmark-row schema: name + wall + memory (+ compiles).
+
+    ``ru_maxrss_mb`` is stamped here (it is free and always meaningful);
+    callers add whatever derived fields their figure reports via
+    ``extra``.  Every figN JSON row and the ``BENCH_OBS.json`` trajectory
+    rows go through this, so cross-PR tooling can rely on the keys.
+    """
+    rec = {
+        "name": name,
+        "seconds": float(seconds),
+        "ru_maxrss_mb": ru_maxrss_mb(),
+    }
+    if tracemalloc_peak_bytes is not None:
+        rec["tracemalloc_peak_bytes"] = int(tracemalloc_peak_bytes)
+    if compiles is not None:
+        rec["compiles"] = int(compiles)
+    rec.update(extra)
+    return rec

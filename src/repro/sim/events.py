@@ -48,6 +48,7 @@ import numpy as np
 import jax
 
 from .. import env
+from .. import obs
 from ..analysis.contracts import (
     check_carry_migration,
     check_sim_state,
@@ -520,48 +521,59 @@ def simulate_events(
     for t0, t1 in segs:
         evs = ev_by_step.get(t0)
         if evs:
-            old_systems = list(systems)
-            old_batch = batch
-            rm_tot = [
-                np.arange(systems[i].n_paths, dtype=np.int64)
-                for i in range(B)
-            ]
-            sm_tot = [
-                np.arange(systems[i].n_slots, dtype=np.int64)
-                for i in range(B)
-            ]
-            for ev in evs:
-                for i in range(B):
-                    top_new, ps_new = _apply_event(
-                        ev, tops[i], systems[i], comms[i], i, heal_store
+            with obs.span("sim/reroute", step=int(t0), events=len(evs)):
+                old_systems = list(systems)
+                old_batch = batch
+                rm_tot = [
+                    np.arange(systems[i].n_paths, dtype=np.int64)
+                    for i in range(B)
+                ]
+                sm_tot = [
+                    np.arange(systems[i].n_slots, dtype=np.int64)
+                    for i in range(B)
+                ]
+                for ev in evs:
+                    for i in range(B):
+                        top_new, ps_new = _apply_event(
+                            ev, tops[i], systems[i], comms[i], i, heal_store
+                        )
+                        rm_step = ps_new.row_map
+                        if rm_step is None:  # full rebuild: all rows fresh
+                            rm_tot[i] = np.full(ps_new.n_paths, -1, np.int64)
+                        else:
+                            rm_step = np.asarray(rm_step, np.int64)
+                            nt = np.full(len(rm_step), -1, np.int64)
+                            ok = rm_step >= 0
+                            nt[ok] = rm_tot[i][rm_step[ok]]
+                            rm_tot[i] = nt
+                        sm_step = _slot_map(tops[i], top_new)
+                        st = np.full(len(sm_tot[i]), -1, np.int64)
+                        ok = sm_tot[i] >= 0
+                        st[ok] = sm_step[sm_tot[i][ok]]
+                        sm_tot[i] = st
+                        tops[i], systems[i] = top_new, ps_new
+                batch = PathSystemBatch.from_systems(list(systems))
+                inp = _scan_inputs(batch, policy, cfg, backend)
+                if carry is not None:
+                    carry, rec = _migrate_carry(
+                        carry, old_batch, old_systems, systems, batch, inp,
+                        comms, rm_tot, sm_tot, lag, cfg, policy, g_del,
+                        g_off, gdum,
                     )
-                    rm_step = ps_new.row_map
-                    if rm_step is None:  # full rebuild: every row is fresh
-                        rm_tot[i] = np.full(ps_new.n_paths, -1, np.int64)
-                    else:
-                        rm_step = np.asarray(rm_step, np.int64)
-                        nt = np.full(len(rm_step), -1, np.int64)
-                        ok = rm_step >= 0
-                        nt[ok] = rm_tot[i][rm_step[ok]]
-                        rm_tot[i] = nt
-                    sm_step = _slot_map(tops[i], top_new)
-                    st = np.full(len(sm_tot[i]), -1, np.int64)
-                    ok = sm_tot[i] >= 0
-                    st[ok] = sm_step[sm_tot[i][ok]]
-                    sm_tot[i] = st
-                    tops[i], systems[i] = top_new, ps_new
-            batch = PathSystemBatch.from_systems(list(systems))
-            inp = _scan_inputs(batch, policy, cfg, backend)
-            if carry is not None:
-                carry, rec = _migrate_carry(
-                    carry, old_batch, old_systems, systems, batch, inp,
-                    comms, rm_tot, sm_tot, lag, cfg, policy, g_del, g_off,
-                    gdum,
-                )
-                rec["step"] = t0
-                rec["kinds"] = [e.kind for e in evs]
-                rec["tags"] = [e.tag for e in evs]
-                records.append(rec)
+                    rec["step"] = t0
+                    rec["kinds"] = [e.kind for e in evs]
+                    rec["tags"] = [e.tag for e in evs]
+                    records.append(rec)
+                    obs.counter("sim/migrations").inc()
+                    obs.counter("sim/migrate/survived").inc(
+                        int(np.sum(rec["survived"]))
+                    )
+                    obs.counter("sim/migrate/reselected").inc(
+                        int(np.sum(rec["reselected"]))
+                    )
+                    obs.counter("sim/migrate/killed").inc(
+                        int(np.sum(rec["killed"]))
+                    )
         if batch is None:
             batch = PathSystemBatch.from_systems(list(systems))
             inp = _scan_inputs(batch, policy, cfg, backend)
@@ -575,13 +587,17 @@ def simulate_events(
                 cfg.nbins,
             )
         logits, eos = _epoch_logits(workload, batch, inp["n_comm"], T)
-        carry, thr, nact, bh = _run_segment(
-            inp, carry, np.arange(t0, t1, dtype=np.int32), rate[t0:t1],
-            eos[t0:t1], logits, sp, cfg, policy, key,
-        )
-        thrs.append(np.asarray(thr))
-        nacts.append(np.asarray(nact))
-        bhs.append(np.asarray(bh))
+        with obs.span("sim/segment", t0=int(t0), t1=int(t1),
+                      steps=int(t1 - t0)):
+            carry, thr, nact, bh = _run_segment(
+                inp, carry, np.arange(t0, t1, dtype=np.int32), rate[t0:t1],
+                eos[t0:t1], logits, sp, cfg, policy, key,
+            )
+            thrs.append(np.asarray(thr))
+            nacts.append(np.asarray(nact))
+            bhs.append(np.asarray(bh))
+        obs.counter("sim/segments").inc()
+        obs.counter("sim/steps").inc(int(t1 - t0))
 
     (_, rem_f, _, _, _, _, _, fct_hist, fct_sum, fct_cnt, comm_del,
      comm_off, util_sum, drops, admitted, bh_sum) = carry
